@@ -1,0 +1,109 @@
+"""§Roofline: derive the three roofline terms per (arch x shape) from the
+dry-run's compiled artifacts (results/dryrun_<mesh>.json).
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+ICI per link.  ``cost_analysis`` on the SPMD-partitioned executable is
+PER-DEVICE (verified: smollm train flops x 256 == 6·N·D within 2%), so:
+
+    compute_term    = flops_dev / 197e12            [s]
+    memory_term     = bytes_dev / 819e9             [s]
+    collective_term = coll_bytes_dev / 50e9         [s]  (per-link, worst case)
+
+MODEL_FLOPS ratio = model_flops / (flops_dev * chips) — how much of the
+compiled compute is algorithmically useful (catches remat/dense-attention
+waste).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+_SUGGEST = {
+    "compute": "raise MXU utilization: bf16 compute, fuse small ops, "
+               "cut remat recompute",
+    "memory": "cut HBM traffic: chunked attention (no S*T probs), bf16 "
+              "activations/cache, shard replicated states",
+    "collective": "cut wire bytes: reduce-scatter instead of all-reduce, "
+                  "shard MoE buffers on (expert,capacity), overlap via "
+                  "microbatch pipelining",
+}
+
+
+def analyze(mesh_name: str = "pod", *, variant: str = "") -> list[dict]:
+    """variant: '' (current), '_opt' (optimized), '_baseline' (snapshot)."""
+    path = RESULTS / f"dryrun_{mesh_name}{variant}.json"
+    recs = json.loads(path.read_text())
+    chips = 512 if mesh_name == "multipod" else 256
+    rows = []
+    for key, r in sorted(recs.items()):
+        if len(key.split("|")) > 2:
+            continue  # per-iteration variants live in §Perf, not the table
+        if r.get("status") != "ok":
+            rows.append({"cell": key, "status": r.get("status", "?"),
+                         "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        coll = sum(v for k, v in r["collective_bytes"].items() if k != "count")
+        t_c = r["hlo_flops"] / PEAK_FLOPS
+        t_m = r["hlo_bytes"] / HBM_BW
+        t_x = coll / LINK_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                  key=lambda kv: kv[1])[0]
+        useful = (
+            r["model_flops"] / (r["hlo_flops"] * chips)
+            if r["hlo_flops"] else float("nan")
+        )
+        bound = max(t_c, t_m, t_x)
+        rows.append({
+            "cell": key,
+            "status": "ok",
+            "kind": r["kind"],
+            "compute_s": t_c,
+            "memory_s": t_m,
+            "collective_s": t_x,
+            "dominant": dom,
+            "roofline_frac": t_c / bound if bound else 0.0,
+            "useful_flops_ratio": useful,
+            "peak_gb": r["peak_bytes"] / 2 ** 30,
+            "suggest": _SUGGEST[dom],
+        })
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    out = ["| cell | kind | compute s | memory s | collective s | dominant |"
+           " frac@roofline | useful/compiled | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['cell']} | {r['status']}: {r['reason']} |"
+                       + " |" * 7)
+            continue
+        out.append(
+            f"| {r['cell']} | {r['kind']} | {r['compute_s']:.2e} |"
+            f" {r['memory_s']:.2e} | {r['collective_s']:.2e} |"
+            f" {r['dominant']} | {r['roofline_frac']:.2f} |"
+            f" {r['useful_flops_ratio']:.2f} | {r['peak_gb']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    import sys
+
+    variant = sys.argv[1] if len(sys.argv) > 1 else ""
+    for mesh in ("pod", "multipod"):
+        if not (RESULTS / f"dryrun_{mesh}{variant}.json").exists():
+            continue
+        rows = analyze(mesh, variant=variant)
+        print(f"\n## Roofline — {mesh} mesh{variant or ' (current)'}\n")
+        print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

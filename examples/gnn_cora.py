@@ -1,0 +1,49 @@
+"""Full-batch GAT training on a synthetic Cora-shaped graph, with triangle
+counts as extra structural node features — the paper's algorithm feeding
+the GNN substrate it shares.
+
+    PYTHONPATH=src python examples/gnn_cora.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.data import gnn_batch
+from repro.configs.registry import arch_module
+from repro.core.sequential import triangle_count
+from repro.graph.csr import from_edges, max_degree
+from repro.launch import steps as steps_mod
+from repro.train.optimizer import OptConfig, opt_init
+
+
+def main():
+    cfg = dataclasses.replace(arch_module("gat-cora").SMOKE, d_in=9,
+                              n_classes=3)
+    batch = gnn_batch("gat-cora", cfg, n_nodes=300, n_edges_und=1200,
+                      d_feat=8, seed=1)
+    # --- structural feature from the paper's algorithm: per-vertex level
+    import numpy as np
+
+    g = from_edges(
+        np.stack([np.asarray(batch.src), np.asarray(batch.dst)], 1), 300
+    )
+    res = triangle_count(g, d_max=max_degree(g))
+    levels = res.levels.astype(jnp.float32)[:, None] / 10.0
+    batch = dataclasses.replace(
+        batch, node_feat=jnp.concatenate([batch.node_feat, levels], axis=1)
+    )
+    print(f"graph triangles: {int(res.triangles)}  k={float(res.k):.3f}")
+
+    params = steps_mod.init_for("gat-cora", cfg, jax.random.key(0))
+    opt_cfg = OptConfig(lr=5e-3, warmup=5, total_steps=100)
+    opt = opt_init(opt_cfg, params)
+    step = jax.jit(steps_mod.gnn_train_step("gat-cora", cfg, opt_cfg))
+    for i in range(100):
+        params, opt, metrics = step(params, opt, batch)
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1}: loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end LM training with checkpoint/restart (smoke config by default;
+pass --full to train the real smollm-135m — sized for a TPU slice, slow on
+this CPU container).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+
+from repro.configs.registry import arch_module
+from repro.launch import steps as steps_mod
+from repro.train.data import LMStream
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    mod = arch_module("smollm-135m")
+    cfg = mod.CONFIG if args.full else mod.SMOKE
+    params = steps_mod.init_for("smollm-135m", cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params")
+
+    trainer = Trainer(
+        steps_mod.lm_loss(cfg), params,
+        OptConfig(lr=1e-3, warmup=20, total_steps=args.steps),
+        ckpt_dir=args.ckpt_dir, cfg=cfg, ckpt_every=50,
+    )
+    if trainer.maybe_restore():
+        print(f"resumed from step {trainer.step_num}")
+    report = trainer.fit(
+        LMStream(cfg, args.batch, args.seq), args.steps - trainer.step_num
+    )
+    print(f"final loss {report['final_loss']:.4f} "
+          f"({report['wall_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from results/*.json.
+
+    PYTHONPATH=src:. python scripts/update_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, analyze, to_markdown  # noqa: E402
+
+
+def terms(rec):
+    coll = sum(v for k, v in rec["collective_bytes"].items() if k != "count")
+    return (rec["hlo_flops"] / PEAK_FLOPS, rec["hlo_bytes"] / HBM_BW,
+            coll / LINK_BW, rec["peak_bytes"] / 2 ** 30)
+
+
+def perf_summary() -> str:
+    base = json.loads((ROOT / "results/dryrun_pod_baseline.json").read_text())
+    opt = json.loads((ROOT / "results/dryrun_pod_opt.json").read_text())
+    rows = [
+        "| cell | variant | compute s | memory s | collective s | peak GB "
+        "| dominant-term gain |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    picks = [
+        ("smollm-135m|prefill_32k", "memory"),
+        ("qwen2-moe-a2.7b|train_4k", "collective"),
+        ("cover-edge-tc|rmat_pod", "memory"),
+        ("gemma3-4b|decode_32k", "collective"),
+        ("gemma3-1b|long_500k", "collective"),
+        ("phi3.5-moe-42b-a6.6b|train_4k", "collective"),
+    ]
+    for key, dom in picks:
+        if key not in base or key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        if b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        tb = dict(zip(("c", "m", "x", "p"), terms(b)))
+        to_ = dict(zip(("c", "m", "x", "p"), terms(o)))
+        dom_k = {"memory": "m", "collective": "x"}[dom]
+        gain = tb[dom_k] / max(to_[dom_k], 1e-12)
+        rows.append(
+            f"| {key} | baseline | {tb['c']:.2e} | {tb['m']:.2e} |"
+            f" {tb['x']:.2e} | {tb['p']:.1f} | |")
+        rows.append(
+            f"| {key} | optimized | {to_['c']:.2e} | {to_['m']:.2e} |"
+            f" {to_['x']:.2e} | {to_['p']:.1f} | **{gain:,.0f}x {dom}** |")
+    return "\n".join(rows)
+
+
+def main():
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+
+    baseline_md = to_markdown(analyze("pod", variant="_baseline"))
+    exp = re.sub(
+        r"<!-- ROOFLINE_BASELINE -->.*?(?=\n\nReading the baseline)",
+        "<!-- ROOFLINE_BASELINE -->\n\n" + baseline_md,
+        exp, flags=re.S,
+    )
+
+    blocks = []
+    for mesh in ("pod", "multipod"):
+        p = ROOT / f"results/dryrun_{mesh}_opt.json"
+        if p.exists():
+            blocks.append(f"### Optimized roofline — {mesh} mesh\n\n"
+                          + to_markdown(analyze(mesh, variant="_opt")))
+    if blocks:
+        section = "<!-- PERF_SUMMARY -->\n\n" + perf_summary() + \
+            "\n\n" + "\n\n".join(blocks) + "\n"
+        exp = re.sub(r"<!-- PERF_SUMMARY -->.*", section, exp, flags=re.S)
+
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — cover-edge triangle counting (Bader et al., cs.DC 2022) as a
+multi-pod JAX framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

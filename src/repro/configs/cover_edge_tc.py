@@ -1,0 +1,10 @@
+"""--arch cover-edge-tc — the paper's own workload: parallel triangle
+counting on Graph500 RMAT graphs (scale configurable)."""
+FAMILY = "tc"
+# CONFIG carries only algorithm knobs; graph size comes from the SHAPE
+CONFIG = dict(name="cover-edge-tc")
+SMOKE = dict(name="cover-edge-tc-smoke")
+SHAPES = {
+    "rmat_pod": dict(kind="tc", scale=22, edge_factor=16),
+    "rmat_smoke": dict(kind="tc", scale=10, edge_factor=16),
+}

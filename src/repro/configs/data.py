@@ -1,0 +1,97 @@
+"""Synthetic, seeded data builders — used by smoke tests, the examples and
+the training data pipeline (repro.train.data streams these per shard)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.graph.csr import from_edges
+from repro.models.gnn.common import GraphBatch, build_triplets
+
+
+def lm_batch(cfg, batch: int, seq: int, seed: int = 0):
+    key = jax.random.key(seed)
+    toks = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab, jnp.int32)
+    return toks[:, :-1], toks[:, 1:]
+
+
+def gnn_batch(
+    arch: str, cfg, *, n_nodes: int, n_edges_und: int, d_feat: int,
+    n_graphs: int = 1, triplet_factor: int = 8, seed: int = 0,
+    need_triplets: bool | None = None,
+):
+    """Synthesize a GraphBatch of the given topology size."""
+    rng = np.random.default_rng(seed)
+    if n_graphs > 1:
+        # batched small graphs (molecule shape): disjoint union
+        per = n_nodes
+        edges_list = []
+        for gi in range(n_graphs):
+            e, _ = gen.random_geometric(per, 0.45, seed=seed + gi)
+            if len(e) > n_edges_und:
+                e = e[:n_edges_und]
+            edges_list.append(e + gi * per)
+        edges = np.concatenate(edges_list)
+        n_total = per * n_graphs
+        graph_id = np.repeat(np.arange(n_graphs), per).astype(np.int32)
+    else:
+        scale = max(2, int(np.ceil(np.log2(max(n_nodes, 4)))))
+        ef = max(1, n_edges_und // n_nodes)
+        edges, _ = gen.rmat(scale, ef, seed=seed)
+        edges = edges % n_nodes
+        edges = edges[edges[:, 0] != edges[:, 1]][:n_edges_und]
+        n_total = n_nodes
+        graph_id = np.zeros(n_total, np.int32)
+    total_edges_und = n_edges_und * (n_graphs if n_graphs > 1 else 1)
+    g = from_edges(edges, n_total, num_slots=2 * total_edges_und)
+    need_trip = (
+        need_triplets if need_triplets is not None else arch == "dimenet"
+    )
+    if need_trip:
+        cap = triplet_factor * g.num_slots
+        kj, ji = build_triplets(np.asarray(g.src), np.asarray(g.dst),
+                                n_total, cap=cap)
+        trip_kj, trip_ji = jnp.asarray(kj), jnp.asarray(ji)
+    else:
+        trip_kj = trip_ji = None
+    molecular = arch in ("schnet", "dimenet")
+    n_classes = getattr(cfg, "n_classes", 2)
+    labels = (
+        jnp.asarray(rng.standard_normal(n_graphs), jnp.float32)
+        if molecular
+        else jnp.asarray(rng.integers(0, n_classes, n_total), jnp.int32)
+    )
+    return GraphBatch(
+        src=g.src,
+        dst=g.dst,
+        node_feat=None if molecular else jnp.asarray(
+            rng.standard_normal((n_total, d_feat)).astype(np.float32)
+        ),
+        positions=jnp.asarray(
+            np.concatenate([gen.positions_for(n_nodes, seed=seed + i)
+                            for i in range(n_graphs)])
+            if n_graphs > 1 else gen.positions_for(n_total, seed=seed)
+        ) if molecular else None,
+        atom_type=jnp.asarray(rng.integers(0, 20, n_total), jnp.int32)
+        if molecular else None,
+        graph_id=jnp.asarray(graph_id),
+        labels=labels,
+        label_mask=None if molecular else jnp.ones((n_total,), bool),
+        trip_kj=trip_kj,
+        trip_ji=trip_ji,
+    )
+
+
+def bst_batch(cfg, batch: int, seed: int = 0):
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 5)
+    hist = jax.random.randint(ks[0], (batch, cfg.seq_len - 1), 0,
+                              cfg.item_vocab, jnp.int32)
+    target = jax.random.randint(ks[1], (batch,), 0, cfg.item_vocab, jnp.int32)
+    pidx = jax.random.randint(ks[2], (batch * cfg.profile_bag,), 0,
+                              cfg.profile_vocab, jnp.int32)
+    pbag = jnp.repeat(jnp.arange(batch, dtype=jnp.int32), cfg.profile_bag)
+    labels = jax.random.bernoulli(ks[3], 0.3, (batch,)).astype(jnp.float32)
+    return hist, target, pidx, pbag, labels

@@ -1,0 +1,45 @@
+"""Edge classification after BFS (paper §II): tree / strut / horizontal.
+
+Only the horizontal bit is consumed by the counting algorithm (Lemma 1/2);
+tree-vs-strut is provided for completeness/analysis.  ``k_fraction`` is the
+paper's ``k`` — the fraction of undirected edges that are horizontal —
+which drives both the modified-neighborhood size ``(2-k)m`` and the
+communication model.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bfs import UNVISITED
+
+
+def horizontal_mask(
+    src: jnp.ndarray, dst: jnp.ndarray, level: jnp.ndarray, n_nodes: int
+) -> jnp.ndarray:
+    """bool per (possibly padded) directed edge: endpoints on equal level."""
+    valid = (src < n_nodes) & (dst < n_nodes)
+    lev_ext = jnp.concatenate([level, jnp.full((1,), UNVISITED, jnp.int32)])
+    ls = lev_ext[jnp.clip(src, 0, n_nodes)]
+    ld = lev_ext[jnp.clip(dst, 0, n_nodes)]
+    return valid & (ls == ld) & (ls != UNVISITED)
+
+
+def classify_edges(src, dst, level, n_nodes):
+    """Return int8 class per directed edge: 0 pad/invalid, 1 horizontal,
+    2 adjacent-level (tree or strut).  (Tree-vs-strut needs parent pointers,
+    which the counting algorithm never uses.)"""
+    valid = (src < n_nodes) & (dst < n_nodes)
+    lev_ext = jnp.concatenate([level, jnp.full((1,), UNVISITED, jnp.int32)])
+    ls = lev_ext[jnp.clip(src, 0, n_nodes)]
+    ld = lev_ext[jnp.clip(dst, 0, n_nodes)]
+    horiz = valid & (ls == ld)
+    adj = valid & (jnp.abs(ls - ld) == 1)
+    return jnp.where(horiz, 1, jnp.where(adj, 2, 0)).astype(jnp.int8)
+
+
+def k_fraction(src, dst, level, n_nodes) -> jnp.ndarray:
+    """Paper's k: |horizontal undirected edges| / m."""
+    h = horizontal_mask(src, dst, level, n_nodes)
+    und = src < dst  # count each undirected edge once
+    m = jnp.sum((src < n_nodes) & (dst < n_nodes) & und)
+    return jnp.sum(h & und) / jnp.maximum(m, 1)

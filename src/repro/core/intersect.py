@@ -1,0 +1,74 @@
+"""Neighborhood-intersection primitives (pure-jnp reference path).
+
+The paper uses hash tables to intersect the adjacency lists of a
+horizontal edge's endpoints.  Pointer-chasing hash probes are hostile to
+the TPU VPU, so the framework's reference strategy is *probe-from-the-
+smaller-side + branch-free binary search in CSR* (same O(d_u · log d_w)
+bound as the paper's binary-search variant, §III-A):
+
+    for each query edge (u, w):  candidates = N(u_small) (padded to d_max)
+                                 found[j]  = candidates[j] ∈ N(u_large)
+
+``kernels/intersect`` provides the Pallas VMEM-tiled version of exactly
+this loop; this module is its ``ref``-equivalent and the small-graph path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.graph.csr import Graph, bounded_binary_search
+
+
+def probe_common_neighbors(
+    g: Graph,
+    eu: jnp.ndarray,
+    ew: jnp.ndarray,
+    *,
+    d_max: int,
+):
+    """For query edges ``(eu, ew)`` (sentinel-padded with ``n``), return
+    ``(apexes int32[q, d_max], found bool[q, d_max])`` — the candidate
+    common neighbors and the intersection membership mask.
+    """
+    n = g.n_nodes
+    num_steps = max(1, math.ceil(math.log2(d_max + 1)))
+    deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
+    row_ext = g.row_offsets
+    eu_c = jnp.clip(eu, 0, n)
+    ew_c = jnp.clip(ew, 0, n)
+    du = deg_ext[eu_c]
+    dw = deg_ext[ew_c]
+    # probe from the smaller-degree endpoint
+    swap = dw < du
+    small = jnp.where(swap, ew_c, eu_c)
+    large = jnp.where(swap, eu_c, ew_c)
+    d_small = jnp.minimum(du, dw)
+    starts_s = row_ext[small]
+    pos = jnp.arange(d_max, dtype=jnp.int32)
+    idx = starts_s[:, None] + pos[None, :]
+    valid = pos[None, :] < d_small[:, None]
+    idx = jnp.clip(idx, 0, g.num_slots - 1)
+    cand = jnp.where(valid, g.dst[idx], n)
+    starts_l = jnp.broadcast_to(row_ext[large][:, None], cand.shape)
+    len_l = jnp.broadcast_to(deg_ext[large][:, None], cand.shape)
+    found = bounded_binary_search(
+        g.dst, starts_l, len_l, cand, num_steps=num_steps
+    )
+    found = found & valid & (eu < n)[:, None] & (ew < n)[:, None]
+    return cand, found
+
+
+def edge_exists(g: Graph, qu: jnp.ndarray, qv: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized membership: is (qu, qv) an edge?  Used by the wedge
+    baseline (the closing-edge check prior algorithms communicate for)."""
+    n = g.n_nodes
+    num_steps = max(1, math.ceil(math.log2(g.num_slots + 1)))
+    deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
+    qu_c = jnp.clip(qu, 0, n)
+    starts = g.row_offsets[qu_c]
+    lens = deg_ext[qu_c]
+    hit = bounded_binary_search(g.dst, starts, lens, jnp.where(qv < n, qv, -1),
+                                num_steps=num_steps)
+    return hit & (qu < n) & (qv < n)

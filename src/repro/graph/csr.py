@@ -1,0 +1,158 @@
+"""Static-shape graph container.
+
+The whole framework moves graphs around as a ``Graph`` pytree whose array
+fields have *static* shapes (a hard TPU requirement).  A graph is stored as
+
+  * a symmetrized directed edge list ``(src, dst)`` sorted by ``(src, dst)``
+    — i.e. CSR order — optionally padded with the sentinel vertex ``n`` so
+    different graphs of the same budget share one compiled program, and
+  * CSR ``row_offsets`` / ``deg`` derived from it.
+
+Construction happens host-side in numpy (it is data loading, not traced
+compute); every downstream algorithm (BFS, cover-edge TC, GNN aggregation)
+consumes only the jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Symmetrized graph in CSR-ordered edge-list form.
+
+    Attributes:
+      src, dst:     int32[num_slots] directed edges, CSR-sorted; padded
+                    entries have ``src == dst == n`` (the sentinel vertex).
+      row_offsets:  int32[n + 2] CSR offsets (the extra row is the sentinel
+                    vertex, so ``row_offsets[n+1] == num_slots``).
+      deg:          int32[n] vertex degrees.
+      n_nodes:      static python int, number of real vertices.
+      n_edges_dir:  int32 scalar — number of *real* directed edges (2m).
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    row_offsets: jnp.ndarray
+    deg: jnp.ndarray
+    n_edges_dir: jnp.ndarray
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_slots(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_nodes
+
+    def neighbors_padded(self, max_degree: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Dense ``int32[n, max_degree]`` adjacency, sentinel-padded, sorted."""
+        n = self.n_nodes
+        starts = self.row_offsets[:n]
+        idx = starts[:, None] + jnp.arange(max_degree)[None, :]
+        valid = jnp.arange(max_degree)[None, :] < self.deg[:, None]
+        idx = jnp.where(valid, idx, self.num_slots - 1)
+        nbrs = self.dst[jnp.clip(idx, 0, self.num_slots - 1)]
+        return jnp.where(valid, nbrs, n), valid
+
+
+def from_edges(
+    edges: np.ndarray,
+    n_nodes: int,
+    *,
+    num_slots: Optional[int] = None,
+) -> Graph:
+    """Build a ``Graph`` from an undirected edge array ``int[any, 2]``.
+
+    Deduplicates, drops self-loops, symmetrizes and CSR-sorts.  ``num_slots``
+    pads the directed edge list to a fixed budget (>= 2m).
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0:
+        edges = np.zeros((0, 2), dtype=np.int64)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    und = np.unique(lo * np.int64(n_nodes) + hi)
+    lo, hi = und // n_nodes, und % n_nodes
+    s = np.concatenate([lo, hi])
+    d = np.concatenate([hi, lo])
+    order = np.lexsort((d, s))
+    s, d = s[order], d[order]
+    m2 = s.shape[0]
+    slots = int(num_slots) if num_slots is not None else m2
+    if slots < m2:
+        raise ValueError(f"num_slots={slots} < 2m={m2}")
+    pad = slots - m2
+    s = np.concatenate([s, np.full(pad, n_nodes, dtype=np.int64)])
+    d = np.concatenate([d, np.full(pad, n_nodes, dtype=np.int64)])
+    counts = np.bincount(s[:m2], minlength=n_nodes + 1)
+    row_offsets = np.zeros(n_nodes + 2, dtype=np.int64)
+    np.cumsum(counts, out=row_offsets[1 : n_nodes + 2])
+    row_offsets[n_nodes + 1] = slots
+    return Graph(
+        src=jnp.asarray(s, dtype=jnp.int32),
+        dst=jnp.asarray(d, dtype=jnp.int32),
+        row_offsets=jnp.asarray(row_offsets, dtype=jnp.int32),
+        deg=jnp.asarray(counts[:n_nodes], dtype=jnp.int32),
+        n_edges_dir=jnp.asarray(m2, dtype=jnp.int32),
+        n_nodes=int(n_nodes),
+    )
+
+
+def undirected_edges(g: Graph) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unique undirected edges as ``(u, w, valid)`` with ``u < w``.
+
+    Returned arrays have ``num_slots`` entries; exactly ``m`` are valid
+    (marked by ``valid``), the rest are sentinel-padded.  Order matches the
+    CSR edge order restricted to ``src < dst``.
+    """
+    keep = g.src < g.dst
+    u = jnp.where(keep, g.src, g.n_nodes)
+    w = jnp.where(keep, g.dst, g.n_nodes)
+    return u, w, keep
+
+
+def bounded_binary_search(
+    sorted_arr: jnp.ndarray,
+    starts: jnp.ndarray,
+    lengths: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    num_steps: int,
+) -> jnp.ndarray:
+    """Branch-free membership test of ``queries[i]`` in the sorted slice
+    ``sorted_arr[starts[i] : starts[i] + lengths[i]]``.
+
+    Runs ``num_steps`` halving iterations (pass ``ceil(log2(max_len + 1))``).
+    This avoids 64-bit packed edge keys entirely (JAX runs x32): an edge
+    ``(v, w)`` exists iff ``w`` is found in the CSR slice of ``v``.
+
+    Returns bool[...] of ``queries``' shape.
+    """
+    lo = starts
+    hi = starts + lengths  # exclusive; lower-bound search
+    last = sorted_arr.shape[0] - 1
+    for _ in range(num_steps):
+        cont = lo < hi
+        mid = (lo + hi) // 2
+        val = sorted_arr[jnp.clip(mid, 0, last)]
+        less = (val < queries) & cont
+        lo = jnp.where(less, mid + 1, lo)
+        hi = jnp.where(cont & ~less, mid, hi)
+    found = (lo < starts + lengths) & (
+        sorted_arr[jnp.clip(lo, 0, last)] == queries
+    )
+    return found
+
+
+def max_degree(g: Graph) -> int:
+    """Host-side max degree (static for kernel padding decisions)."""
+    return int(jax.device_get(jnp.max(g.deg))) if g.n_nodes else 0

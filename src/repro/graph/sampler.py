@@ -1,0 +1,78 @@
+"""Fanout neighbor sampler (GraphSAGE-style) — the ``minibatch_lg`` path.
+
+Jittable, static-shape: for seeds ``[B]`` and fanouts ``(f1, f2, ...)`` it
+samples (with replacement, the standard trick for static shapes) ``f_h``
+neighbors per frontier node per hop and returns the induced block subgraph
+in *local* ids:
+
+  nodes   int32[n_sub]        global ids, sentinel-padded
+  src,dst int32[e_sub]        local-id edges (sampled nbr -> frontier node)
+  seed_mask bool[n_sub]       which local nodes are the loss-bearing seeds
+
+At cluster scale this runs inside the sharded data pipeline (each data
+shard samples its own seed batch from its graph shard); the model's
+train_step consumes only the fixed-shape subgraph, so the sampler never
+appears on the TPU critical path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_blocks(
+    key: jax.Array,
+    row_offsets: jnp.ndarray,
+    dst: jnp.ndarray,
+    deg: jnp.ndarray,
+    seeds: jnp.ndarray,
+    fanouts: tuple[int, ...],
+    n_nodes: int,
+):
+    """Sample a layered subgraph around ``seeds``.
+
+    Isolated / sentinel frontier nodes sample the sentinel vertex, and the
+    resulting padded edges carry local dst id ``n_sub`` (dropped by the
+    segment ops downstream).
+    """
+    frontiers = [seeds]
+    edges_src_g = []  # global ids of sampled neighbors, per hop
+    edges_dst_l = []  # local (position-in-concat) ids of frontier nodes
+    offset = 0
+    last = dst.shape[0] - 1
+    for hop, f in enumerate(fanouts):
+        frontier = frontiers[-1]
+        key, sub = jax.random.split(key)
+        u = jax.random.uniform(sub, (frontier.shape[0], f))
+        fdeg = deg[jnp.clip(frontier, 0, n_nodes - 1)]
+        fdeg = jnp.where(frontier >= n_nodes, 0, fdeg)
+        pick = (u * jnp.maximum(fdeg, 1)[:, None]).astype(jnp.int32)
+        starts = row_offsets[jnp.clip(frontier, 0, n_nodes - 1)]
+        idx = jnp.clip(starts[:, None] + pick, 0, last)
+        nbrs = dst[idx]
+        valid = (fdeg[:, None] > 0) & (frontier[:, None] < n_nodes)
+        nbrs = jnp.where(valid, nbrs, n_nodes)
+        edges_src_g.append(nbrs.reshape(-1))
+        dst_local = jnp.broadcast_to(
+            (offset + jnp.arange(frontier.shape[0]))[:, None], nbrs.shape
+        ).reshape(-1)
+        edges_dst_l.append(dst_local)
+        offset += frontier.shape[0]
+        frontiers.append(nbrs.reshape(-1))
+    nodes = jnp.concatenate(frontiers)
+    n_sub = nodes.shape[0]
+    # local src ids: neighbors of hop h live at the start of frontier h+1
+    src_local = []
+    off = 0
+    for h, f in enumerate(fanouts):
+        cnt = frontiers[h].shape[0] * f
+        off += frontiers[h].shape[0]
+        src_local.append(off + jnp.arange(cnt))
+    src_l = jnp.concatenate(src_local).astype(jnp.int32)
+    dst_l = jnp.concatenate(edges_dst_l).astype(jnp.int32)
+    pad = jnp.concatenate(
+        [s >= jnp.asarray(n_nodes) for s in edges_src_g]
+    )
+    dst_l = jnp.where(pad, n_sub, dst_l)  # padded edges dropped by segment ops
+    seed_mask = jnp.zeros((n_sub,), bool).at[: seeds.shape[0]].set(seeds < n_nodes)
+    return nodes.astype(jnp.int32), src_l, dst_l, seed_mask

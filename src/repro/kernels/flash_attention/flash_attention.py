@@ -1,0 +1,145 @@
+"""Pallas TPU flash attention (FlashAttention-2 schedule).
+
+Grid (B*Hq, S/BQ, T/BK); the KV dim is innermost (sequential on TPU), so
+the running (m, l, acc) state lives in VMEM scratch across KV steps.
+Supports causal masking, sliding windows (gemma3 local layers) and GQA via
+the K/V BlockSpec index map (query head -> kv head arithmetic — no
+jnp.repeat materialization).  Fully-masked (q-block, kv-block) tiles are
+skipped with `pl.when` — for sliding windows this is what makes the local
+layers O(S·W) instead of O(S²).
+
+VMEM per program ≈ BQ·D + 2·BK·D + BQ·BK floats — (128, 128) blocks at
+D=128 stay well under 1 MiB, leaving headroom for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int | None, kv_offset: int,
+    block_q: int, block_k: int, kv_steps: int, s_len: int, t_len: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = iq * block_q + jax.lax.iota(jnp.int32, block_q) + kv_offset
+    kpos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    # tile-level skip for fully-masked tiles
+    q_lo = iq * block_q + kv_offset
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (q_hi >= k_lo)
+    if window is not None:
+        live = live & (q_lo - k_hi < window)
+
+    @pl.when(live)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (BQ, BK)
+        mask = jnp.ones((block_q, block_k), bool)
+        mask &= (qpos[:, None] < s_len + kv_offset) & (kpos[None, :] < t_len)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]  # (BQ, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # (BQ, 1)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "kv_offset", "scale", "block_q", "block_k",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, T, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, s_len, d = q.shape
+    _, hkv, t_len, _ = k.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    sp = -(-s_len // block_q) * block_q
+    tp = -(-t_len // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sp - s_len), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, tp - t_len), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, tp - t_len), (0, 0)))
+    q3 = qp.reshape(b * hq, sp, d)
+    k3 = kp.reshape(b * hkv, tp, d)
+    v3 = vp.reshape(b * hkv, tp, d)
+    kv_steps = tp // block_k
+    grid = (b * hq, sp // block_q, kv_steps)
+
+    def kv_index(bh, iq_, ik_):
+        return (bh // hq) * hkv + (bh % hq) // rep, ik_, 0
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            kv_offset=kv_offset, block_q=block_q, block_k=block_k,
+            kv_steps=kv_steps, s_len=s_len, t_len=t_len,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq_, ik_: (bh, iq_, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq_, ik_: (bh, iq_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(b, hq, sp, d)[:, :, :s_len]

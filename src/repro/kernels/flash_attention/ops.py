@@ -1,0 +1,35 @@
+"""Public attention entry point used by the transformer stack.
+
+Chooses between the Pallas flash kernel and the jnp oracle.  On this CPU
+container the kernel runs in interpret mode for validation; model code
+defaults to the oracle (XLA fuses it well on CPU) and the launcher flips
+``use_pallas`` for TPU targets.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_offset: int = 0,
+    scale: float | None = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if use_pallas:
+        return flash_attention(
+            q, k, v, causal=causal, window=window, kv_offset=kv_offset,
+            scale=scale, interpret=interpret,
+        )
+    return attention_ref(
+        q, k, v, causal=causal, window=window, kv_offset=kv_offset, scale=scale
+    )

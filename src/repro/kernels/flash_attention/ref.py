@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for flash attention: plain masked softmax attention.
+
+Mask semantics shared with the kernel:
+  causal:   q_pos >= k_pos           (q_pos = query index + kv_offset)
+  window:   q_pos - k_pos < window   (sliding window, gemma3 local layers)
+GQA: n_q_heads is a multiple of n_kv_heads; kv heads are repeated.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, T, D]
+    v: jnp.ndarray,  # [B, Hkv, T, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_offset: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None] + kv_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    denom = probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs / jnp.maximum(denom, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)

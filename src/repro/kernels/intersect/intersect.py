@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: batched sorted-list intersection with level split.
+
+Hardware adaptation (DESIGN.md §2): the paper intersects adjacency lists
+with *hash tables* — pointer-chasing probes that map terribly onto the TPU
+VPU.  The TPU-native formulation is a **tiled all-pairs compare** over the
+two sorted lists: each grid step loads a (BQ, BD) candidate tile and a
+(BQ, BD) target tile into VMEM and evaluates the (BQ, BD, BD) equality
+cube with 8x128-lane vector ops.  Sorted inputs give a cheap tile-level
+early-out (`pl.when`) — whole tile pairs whose value ranges don't overlap
+are skipped, recovering most of merge-path's advantage without its serial
+two-pointer dependency.
+
+Work per query is O(D^2 / V) vector slots vs the paper's O(D) serial hash
+probes; for V = 8*128 VPU lanes and the D <= few-hundred sublists produced
+by the sample-sort transpose, the crossover strongly favors the vector
+form — and it needs no hash-table build, no scatter, no data-dependent
+control flow.
+
+Grid: (Q/BQ, D/BD, D/BD); the two counter outputs are revisited across the
+inner two grid dims and accumulated in place (sequential TPU grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CAND_PAD = -1
+TARG_PAD = -2
+
+
+def _kernel(cand_ref, targ_ref, lev_c_ref, lev_u_ref, c1_ref, c2_ref):
+    i1 = pl.program_id(1)
+    i2 = pl.program_id(2)
+
+    @pl.when((i1 == 0) & (i2 == 0))
+    def _init():
+        c1_ref[...] = jnp.zeros_like(c1_ref)
+        c2_ref[...] = jnp.zeros_like(c2_ref)
+
+    cand = cand_ref[...]  # (BQ, BD) int32, sorted rows, pad -1
+    targ = targ_ref[...]  # (BQ, BD) int32, sorted rows, pad -2
+    # tile-level early out: sorted rows => ranges that don't overlap anywhere
+    # in the whole tile can never match (pads are negative, real ids >= 0)
+    c_lo, c_hi = jnp.min(cand), jnp.max(cand)
+    t_lo, t_hi = jnp.min(targ), jnp.max(targ)
+    overlap = (c_hi >= 0) & (t_hi >= 0) & (c_lo <= t_hi) & (t_lo <= c_hi)
+
+    @pl.when(overlap)
+    def _work():
+        eq = cand[:, :, None] == targ[:, None, :]
+        hit = jnp.any(eq, axis=2) & (cand >= 0)
+        same = lev_c_ref[...] == lev_u_ref[...][:, None]
+        c1_ref[...] += jnp.sum(hit & ~same, axis=1).astype(jnp.int32)
+        c2_ref[...] += jnp.sum(hit & same, axis=1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_d", "interpret")
+)
+def intersect_pallas(
+    cand: jnp.ndarray,
+    targ: jnp.ndarray,
+    lev_c: jnp.ndarray,
+    lev_u: jnp.ndarray,
+    *,
+    block_q: int = 32,
+    block_d: int = 128,
+    interpret: bool = True,  # CPU container default; pass False on real TPU
+):
+    """See ref.intersect_ref. Shapes are padded up to block multiples here."""
+    q, d = cand.shape
+    qp = -(-q // block_q) * block_q
+    dp = -(-d // block_d) * block_d
+    cand = jnp.pad(cand, ((0, qp - q), (0, dp - d)), constant_values=CAND_PAD)
+    targ = jnp.pad(targ, ((0, qp - q), (0, dp - d)), constant_values=TARG_PAD)
+    lev_c = jnp.pad(lev_c, ((0, qp - q), (0, dp - d)), constant_values=-7)
+    lev_u = jnp.pad(lev_u, (0, qp - q), constant_values=-9)
+    grid = (qp // block_q, dp // block_d, dp // block_d)
+    c1, c2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i1)),
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i2)),
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i1)),
+            pl.BlockSpec((block_q,), lambda iq, i1, i2: (iq,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda iq, i1, i2: (iq,)),
+            pl.BlockSpec((block_q,), lambda iq, i1, i2: (iq,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp,), jnp.int32),
+            jax.ShapeDtypeStruct((qp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand, targ, lev_c, lev_u)
+    return c1[:q], c2[:q]

@@ -1,0 +1,58 @@
+"""Jit'd public wrapper: CSR horizontal-edge queries -> (c1, c2).
+
+Does the irregular work where the TPU wants it (XLA gathers), then calls
+the Pallas tile kernel.  ``use_pallas=False`` falls back to the pure-jnp
+oracle — both paths share the same gather front-end, so kernel-vs-ref
+tests exercise exactly the kernel math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import Graph
+from repro.kernels.intersect.intersect import CAND_PAD, TARG_PAD, intersect_pallas
+from repro.kernels.intersect.ref import intersect_ref
+
+
+def _gather_padded(g: Graph, v: jnp.ndarray, d_max: int, pad: int):
+    n = g.n_nodes
+    deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
+    starts = g.row_offsets[jnp.clip(v, 0, n)]
+    dv = deg_ext[jnp.clip(v, 0, n)]
+    pos = jnp.arange(d_max, dtype=jnp.int32)
+    idx = jnp.clip(starts[:, None] + pos[None, :], 0, g.num_slots - 1)
+    ok = (pos[None, :] < dv[:, None]) & (v < n)[:, None]
+    return jnp.where(ok, g.dst[idx], pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d_max", "use_pallas", "interpret")
+)
+def horizontal_edge_counts(
+    g: Graph,
+    qu: jnp.ndarray,
+    qw: jnp.ndarray,
+    level: jnp.ndarray,
+    *,
+    d_max: int,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Per horizontal edge (qu, qw): (#diff-level apexes, #same-level apexes).
+
+    ``interpret`` defaults True because this container is CPU; on real TPU
+    pass False.
+    """
+    n = g.n_nodes
+    cand = _gather_padded(g, qu, d_max, CAND_PAD)
+    targ = _gather_padded(g, qw, d_max, TARG_PAD)
+    lev_ext = jnp.concatenate([level, jnp.full((1,), -7, jnp.int32)])
+    lev_c = lev_ext[jnp.clip(cand, 0, n)]
+    lev_c = jnp.where(cand >= 0, lev_c, -7)
+    lev_u = jnp.where(qu < n, lev_ext[jnp.clip(qu, 0, n)], -9)
+    if use_pallas:
+        return intersect_pallas(cand, targ, lev_c, lev_u, interpret=interpret)
+    return intersect_ref(cand, targ, lev_c, lev_u)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the batched sorted-list intersection kernel.
+
+Inputs are the *pre-gathered dense* query blocks (the irregular CSR->dense
+gather happens once in ops.py via XLA, which is where TPUs want gathers):
+
+  cand   int32[Q, D]   sorted candidate neighbor lists (pad = -1)
+  targ   int32[Q, D]   sorted target neighbor lists   (pad = -2)
+  lev_c  int32[Q, D]   BFS level of each candidate
+  lev_u  int32[Q]      BFS level of the horizontal edge's endpoints
+
+Outputs per query: c1 (apex on a different level), c2 (apex on the same
+level) — the two counters of Theorem 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def intersect_ref(cand, targ, lev_c, lev_u):
+    eq = cand[:, :, None] == targ[:, None, :]
+    hit = eq.any(axis=2) & (cand >= 0)
+    same = hit & (lev_c == lev_u[:, None])
+    diff = hit & ~(lev_c == lev_u[:, None])
+    return (
+        diff.sum(axis=1).astype(jnp.int32),
+        same.sum(axis=1).astype(jnp.int32),
+    )

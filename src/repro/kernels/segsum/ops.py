@@ -1,0 +1,33 @@
+"""Jit'd wrapper for the blocked MXU segment-sum.
+
+``segment_sum`` switches between the Pallas kernel (given a prebuilt
+``SegsumLayout``) and the jnp oracle; the layout is built once per graph
+topology (host-side) and reused across training steps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segsum.ref import segment_sum_ref
+from repro.kernels.segsum.segsum import SegsumLayout, segment_sum_pallas
+
+
+def build_layout(
+    seg_ids: np.ndarray, num_segments: int, *, block_n: int = 128,
+    block_e: int = 256
+) -> SegsumLayout:
+    return SegsumLayout(seg_ids, num_segments, block_n=block_n, block_e=block_e)
+
+
+def segment_sum(
+    msgs: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_segments: int,
+    *,
+    layout: SegsumLayout | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if layout is not None:
+        return segment_sum_pallas(msgs, layout, interpret=interpret)
+    return segment_sum_ref(msgs, seg, num_segments)

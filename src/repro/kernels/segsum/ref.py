@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the blocked segment-sum kernel: plain
+``jax.ops.segment_sum`` over the original (ungrouped) edge stream."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(msgs: jnp.ndarray, seg: jnp.ndarray, num_segments: int):
+    """msgs f32[E, F], seg int32[E] (negative = padding -> dropped)."""
+    seg = jnp.where(seg < 0, num_segments, seg)
+    return jax.ops.segment_sum(msgs, seg, num_segments=num_segments + 1)[
+        :num_segments
+    ]

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: segment-sum as one-hot MXU matmuls over node blocks.
+
+Hardware adaptation: GPU GNN systems scatter-add through global-memory
+atomics; TPUs have no atomics, and XLA lowers ``segment_sum`` to serialized
+dynamic-update-slices when it can't prove disjointness.  The TPU-native
+trick (used by TPU GNN/MoE systems, cf. MegaBlocks-style dispatch): group
+edges by destination-node *block*, then per block accumulate
+
+    out[BN, F] += onehot(seg - block_start)[BE, BN]^T  @  msgs[BE, F]
+
+— a dense (BN x BE) x (BE x F) MXU matmul per edge tile: the scatter
+becomes systolic compute.  Edges are pre-grouped host-side once per graph
+(``build_layout``); the kernel grid is (node_blocks, max_tiles_per_block)
+with a scalar-prefetched tile-start table and per-block tile counts, so
+ragged blocks skip their tail tiles via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class SegsumLayout:
+    """Host-side (numpy) edge grouping, built once per graph/topology."""
+
+    def __init__(self, seg_ids: np.ndarray, num_segments: int,
+                 block_n: int = 128, block_e: int = 256):
+        seg_ids = np.asarray(seg_ids)
+        self.block_n = block_n
+        self.block_e = block_e
+        self.num_segments = int(num_segments)
+        self.n_blocks = -(-self.num_segments // block_n)
+        valid = (seg_ids >= 0) & (seg_ids < num_segments)
+        order = np.argsort(np.where(valid, seg_ids, num_segments), kind="stable")
+        sorted_seg = seg_ids[order]
+        sorted_valid = valid[order]
+        blk = np.where(sorted_valid, sorted_seg // block_n, self.n_blocks)
+        counts = np.bincount(blk[sorted_valid], minlength=self.n_blocks)
+        tiles = -(-counts // block_e)
+        tiles = np.maximum(tiles, 0)
+        self.tile_start = np.zeros(self.n_blocks + 1, dtype=np.int32)
+        np.cumsum(tiles, out=self.tile_start[1:])
+        self.n_tiles = tiles.astype(np.int32)
+        self.g_max = int(tiles.max()) if len(tiles) else 1
+        self.total_tiles = max(int(self.tile_start[-1]), 1)
+        # gather index: padded grouped buffer slot -> original edge position
+        gather = np.full(self.total_tiles * block_e, -1, dtype=np.int64)
+        seg2 = np.full(self.total_tiles * block_e, -1, dtype=np.int32)
+        edge_pos = 0
+        for b in range(self.n_blocks):
+            base = int(self.tile_start[b]) * block_e
+            c = int(counts[b])
+            gather[base: base + c] = order[edge_pos: edge_pos + c]
+            seg2[base: base + c] = sorted_seg[edge_pos: edge_pos + c]
+            edge_pos += c
+        self.gather = jnp.asarray(np.clip(gather, 0, None), dtype=jnp.int32)
+        self.gather_valid = jnp.asarray(gather >= 0)
+        self.seg2 = jnp.asarray(seg2.reshape(self.total_tiles, block_e))
+        self.tile_start_j = jnp.asarray(self.tile_start[:-1])
+        self.n_tiles_j = jnp.asarray(self.n_tiles)
+
+
+def _kernel(ts_ref, nt_ref, seg_ref, msg_ref, out_ref, *, block_n: int):
+    b = pl.program_id(0)
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(g < nt_ref[b])
+    def _work():
+        rows = seg_ref[0, :] - b * block_n  # (BE,)
+        onehot = (
+            rows[:, None] == jax.lax.iota(jnp.int32, block_n)[None, :]
+        ).astype(msg_ref.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            onehot, msg_ref[0],
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(out_ref.dtype)
+
+
+def _tile_index(b, g, ts, nt):
+    # clamp the tail programs of ragged blocks onto their last real tile
+    # (their compute is skipped by pl.when, only the prefetch is redirected)
+    return ts[b] + jnp.minimum(g, jnp.maximum(nt[b] - 1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def _run(msgs, layout: SegsumLayout, interpret: bool):
+    be, bn = layout.block_e, layout.block_n
+    f = msgs.shape[1]
+    grouped = jnp.where(
+        layout.gather_valid[:, None], msgs[layout.gather], 0.0
+    ).reshape(layout.total_tiles, be, f)
+    grid = (layout.n_blocks, layout.g_max)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_n=bn),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, be), lambda b, g, ts, nt: (_tile_index(b, g, ts, nt), 0)),
+                pl.BlockSpec(
+                    (1, be, f),
+                    lambda b, g, ts, nt: (_tile_index(b, g, ts, nt), 0, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec((bn, f), lambda b, g, ts, nt: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (layout.n_blocks * bn, f), jnp.float32
+        ),
+        interpret=interpret,
+    )(layout.tile_start_j, layout.n_tiles_j, layout.seg2, grouped)
+    return out[: layout.num_segments]
+
+
+def segment_sum_pallas(
+    msgs: jnp.ndarray,
+    layout: SegsumLayout,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """MXU segment-sum of ``msgs`` by the layout's segment ids."""
+    return _run(msgs, layout, interpret)

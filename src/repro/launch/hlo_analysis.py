@@ -1,0 +1,63 @@
+"""HLO-text analysis helpers (import-safe: no jax/device side effects —
+launch/dryrun.py must mutate XLA_FLAGS at import, so anything tests or
+benchmarks need to import lives here instead)."""
+from __future__ import annotations
+
+import re
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def bytes_of_shape(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective ICI-traffic proxy, per device, summed over the module.
+
+    Charges each op its OUTPUT bytes (the type annotation preceding the op
+    name on its HLO line), with a 2x multiplier for all-reduce (ring AR =
+    reduce-scatter + all-gather phases each moving ~(N-1)/N of payload).
+    ``-done`` halves of async pairs are skipped.
+    """
+    out: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        _, sep, rhs = s.partition(" = ")
+        if not sep:
+            continue
+        op = None
+        idx = -1
+        for c in COLLECTIVES:
+            idx = rhs.find(f" {c}")
+            if idx >= 0 and (f"{c}(" in rhs or f"{c}-start(" in rhs):
+                op = c
+                break
+        if op is None or f"{op}-done" in rhs:
+            continue
+        mult = 2.0 if op == "all-reduce" else 1.0
+        out[op] += mult * bytes_of_shape(rhs[:idx])
+        out["count"] += 1
+    return out

@@ -1,0 +1,24 @@
+"""Production mesh construction (defined as functions so importing this
+module never touches jax device state — required by the dry-run protocol).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_tc_mesh(p: int | None = None):
+    """The paper's 1-D p-processor axis over all available devices."""
+    n = len(jax.devices()) if p is None else p
+    return jax.make_mesh((n,), ("p",))
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    return jax.make_mesh(shape, axes)

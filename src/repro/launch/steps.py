@@ -1,0 +1,130 @@
+"""Lowerable step functions per family — the exact programs the dry-run
+compiles and the trainer/server run.
+
+Training steps include the optimizer update (the honest per-device memory
+picture).  Gradient accumulation (microbatching) happens via scan when
+``accum > 1`` — the remat-friendly, collective-overlapping formulation:
+each microbatch's backward all-reduces while the next one computes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe  # noqa: F401  (re-export convenience)
+from repro.models import transformer as tfm
+from repro.models.gnn import dimenet as dimenet_m
+from repro.models.gnn import gat as gat_m
+from repro.models.gnn import gatedgcn as gatedgcn_m
+from repro.models.recsys import bst as bst_m
+from repro.models.gnn import schnet as schnet_m
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+GNN_MODULES = {
+    "gatedgcn": gatedgcn_m,
+    "gat-cora": gat_m,
+    "schnet": schnet_m,
+    "dimenet": dimenet_m,
+}
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptConfig, *, accum: int = 1,
+                    remat: bool = True):
+    """loss_fn(params, *batch_leaves) -> scalar.  Returns
+    step(params, opt_state, *batch) -> (params, opt_state, metrics).
+
+    With accum > 1 every batch leaf must have a leading [accum] axis.
+    (Remat is handled INSIDE the models — per scanned block — not here;
+    wrapping value_and_grad in checkpoint would save nothing.)"""
+    del remat
+    vloss = jax.value_and_grad(loss_fn)
+
+    def step(params, opt_state, *batch):
+        if accum == 1:
+            loss, grads = vloss(params, *batch)
+        else:
+            def micro(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = vloss(params, *mb)
+                return (
+                    loss_acc + loss / accum,
+                    jax.tree.map(lambda a, g: a + g / accum, grads_acc, grads),
+                ), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.float32(0), zeros), batch
+            )
+        params, opt_state, gn = opt_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+    return step
+
+
+# ------------------------------------------------------------------- LM
+
+def lm_loss(cfg):
+    return lambda params, tokens, labels: tfm.loss_fn(cfg, params, tokens, labels)
+
+
+def lm_train_step(cfg, opt_cfg: OptConfig, *, accum: int = 1):
+    return make_train_step(lm_loss(cfg), opt_cfg, accum=accum)
+
+
+def lm_prefill_step(cfg, max_len: int):
+    def step(params, tokens):
+        return tfm.prefill(cfg, params, tokens, max_len)
+    return step
+
+
+def lm_decode_step(cfg):
+    def step(params, cache, token, index):
+        return tfm.decode_step(cfg, params, cache, token, index)
+    return step
+
+
+# ------------------------------------------------------------------- GNN
+
+def gnn_train_step(arch: str, cfg, opt_cfg: OptConfig):
+    mod = GNN_MODULES[arch]
+    return make_train_step(
+        lambda params, batch: mod.loss_fn(cfg, params, batch), opt_cfg,
+        remat=False,
+    )
+
+
+# ------------------------------------------------------------------- BST
+
+def bst_train_step(cfg, opt_cfg: OptConfig):
+    return make_train_step(
+        lambda params, h, t, pi, pb, y: bst_m.loss_fn(cfg, params, h, t, pi, pb, y),
+        opt_cfg, remat=False,
+    )
+
+
+def bst_serve_step(cfg):
+    def step(params, history, target, profile_idx, profile_bag):
+        return bst_m.forward(cfg, params, history, target, profile_idx,
+                             profile_bag)
+    return step
+
+
+def bst_retrieval_step(cfg):
+    def step(params, history, candidates):
+        return bst_m.score_candidates(cfg, params, history, candidates)
+    return step
+
+
+# ------------------------------------------------------------------- init
+
+def init_for(arch: str, cfg, key) -> Any:
+    if arch in GNN_MODULES:
+        return GNN_MODULES[arch].init_params(key, cfg)
+    if arch == "bst":
+        return bst_m.init_params(key, cfg)
+    return tfm.init_params(key, cfg)

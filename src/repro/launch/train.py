@@ -1,0 +1,130 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Fault tolerance: ``--max-restarts N`` wraps the fit loop — on watchdog
+timeout or crash the driver reloads the latest checkpoint and resumes at
+the stored data cursor (the node-failure story at cluster scale: the
+scheduler relaunches this same entry point).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import arch_module
+from repro.launch import steps as steps_mod
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+
+
+def build_lm_pieces(cfg, args):
+    from repro.train.data import LMStream
+
+    loss = steps_mod.lm_loss(cfg)
+    stream = LMStream(cfg, args.batch, args.seq, seed=args.seed)
+    return loss, stream
+
+
+def build_gnn_pieces(arch, cfg, args):
+    from repro.configs.data import gnn_batch
+
+    batch = gnn_batch(
+        arch, cfg, n_nodes=args.gnn_nodes, n_edges_und=args.gnn_edges,
+        d_feat=getattr(cfg, "d_in", 16), seed=args.seed,
+    )
+    mod = steps_mod.GNN_MODULES[arch]
+
+    class FixedStream:
+        cursor = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            self.cursor += 1
+            return (batch,)
+
+    return (lambda p, b: mod.loss_fn(cfg, p, b)), FixedStream()
+
+
+def build_bst_pieces(cfg, args):
+    from repro.models.recsys import bst as bst_m
+    from repro.train.data import BSTStream
+
+    return (
+        lambda p, h, t, pi, pb, y: bst_m.loss_fn(cfg, p, h, t, pi, pb, y),
+        BSTStream(cfg, args.batch, seed=args.seed),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gnn-nodes", type=int, default=512)
+    ap.add_argument("--gnn-edges", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt", choices=["adamw", "adafactor"], default="adamw")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--max-restarts", type=int, default=2)
+    ap.add_argument("--watchdog-s", type=float, default=600.0)
+    args = ap.parse_args()
+
+    mod = arch_module(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.CONFIG
+    key = jax.random.key(args.seed)
+    params = steps_mod.init_for(args.arch, cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{args.arch}: {n_params/1e6:.2f}M params "
+          f"({'smoke' if args.smoke else 'full'} config)")
+
+    if mod.FAMILY == "lm":
+        loss, stream = build_lm_pieces(cfg, args)
+    elif mod.FAMILY == "gnn":
+        loss, stream = build_gnn_pieces(args.arch, cfg, args)
+    elif mod.FAMILY == "recsys":
+        loss, stream = build_bst_pieces(cfg, args)
+    else:
+        raise SystemExit(f"--arch {args.arch} is not trainable (family "
+                         f"{mod.FAMILY}); see repro.launch.serve / examples")
+
+    opt_cfg = OptConfig(kind=args.opt, lr=args.lr, warmup=10,
+                        total_steps=args.steps)
+
+    attempts = 0
+    while True:
+        trainer = Trainer(
+            loss, params, opt_cfg, ckpt_dir=args.ckpt_dir, cfg=cfg,
+            ckpt_every=args.ckpt_every, watchdog_s=args.watchdog_s,
+        )
+        resumed = trainer.maybe_restore()
+        if resumed:
+            print(f"resumed from step {trainer.step_num} "
+                  f"(cursor {trainer.cursor})")
+        remaining = args.steps - trainer.step_num
+        if remaining <= 0:
+            print("nothing to do")
+            return
+        try:
+            report = trainer.fit(stream, remaining)
+            print(f"done: {report['steps']} steps, "
+                  f"final loss {report['final_loss']:.4f}, "
+                  f"{report['wall_s']:.1f}s")
+            return
+        except (TimeoutError, RuntimeError) as e:  # relaunch path
+            attempts += 1
+            print(f"step failure: {e} (attempt {attempts})")
+            if attempts > args.max_restarts or args.ckpt_dir is None:
+                raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Shared GNN containers.
+
+``GraphBatch`` is the one static-shape structure every GNN arch consumes:
+an edge list in local ids (sentinel = n_nodes drops out of segment ops),
+optional node/edge features, 3-D positions + atom types for the molecular
+nets, a graph-id vector for batched small graphs (``molecule`` shape), and
+a triplet table (k->j, j->i edge-index pairs) for DimeNet built host-side
+by ``build_triplets``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    src: jnp.ndarray                      # int32[E] (pad = n_nodes)
+    dst: jnp.ndarray                      # int32[E]
+    node_feat: Optional[jnp.ndarray]      # f32[N, F]
+    positions: Optional[jnp.ndarray]      # f32[N, 3]
+    atom_type: Optional[jnp.ndarray]      # int32[N]
+    graph_id: Optional[jnp.ndarray]       # int32[N] (pad = n_graphs)
+    labels: Optional[jnp.ndarray]         # task-dependent
+    label_mask: Optional[jnp.ndarray]     # bool[N] (loss-bearing nodes)
+    trip_kj: Optional[jnp.ndarray]        # int32[T] edge ids (pad = E)
+    trip_ji: Optional[jnp.ndarray]        # int32[T]
+
+    @property
+    def n_nodes(self) -> int:
+        return (
+            self.node_feat.shape[0]
+            if self.node_feat is not None
+            else (self.positions.shape[0] if self.positions is not None
+                  else self.atom_type.shape[0])
+        )
+
+    @property
+    def n_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def build_triplets(
+    src: np.ndarray, dst: np.ndarray, n_nodes: int, *, cap: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """DimeNet triplet table: for each directed edge j->i (id eji) and each
+    in-edge k->j (id ekj, k != i), one (ekj, eji) row.  Host-side numpy,
+    built once per topology; truncated at ``cap`` with sentinel padding
+    (truncation count is the caller's to report)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    E = len(src)
+    valid = (src < n_nodes) & (dst < n_nodes)
+    # in-edges of each node: ids of edges whose dst == v
+    order = np.argsort(np.where(valid, dst, n_nodes), kind="stable")
+    sorted_dst = np.where(valid, dst, n_nodes)[order]
+    starts = np.searchsorted(sorted_dst, np.arange(n_nodes + 1))
+    kj_list, ji_list = [], []
+    for eji in range(E):
+        if not valid[eji]:
+            continue
+        j = src[eji]
+        in_j = order[starts[j]: starts[j + 1]]  # edges k->j
+        for ekj in in_j:
+            if src[ekj] != dst[eji]:  # k != i
+                kj_list.append(ekj)
+                ji_list.append(eji)
+            if len(kj_list) >= cap:
+                break
+        if len(kj_list) >= cap:
+            break
+    t = len(kj_list)
+    kj = np.full(cap, E, dtype=np.int32)
+    ji = np.full(cap, E, dtype=np.int32)
+    kj[:t] = kj_list
+    ji[:t] = ji_list
+    return kj, ji
+
+
+def edge_vectors(g: GraphBatch):
+    """(unit vector j->i, distance) per edge; pads give d=1 to avoid NaNs."""
+    n = g.n_nodes
+    ps = g.positions[jnp.clip(g.src, 0, n - 1)]
+    pd = g.positions[jnp.clip(g.dst, 0, n - 1)]
+    vec = pd - ps
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, -1), 1e-12))
+    ok = (g.src < n) & (g.dst < n)
+    dist = jnp.where(ok, dist, 1.0)
+    return vec / dist[:, None], dist, ok

@@ -1,0 +1,129 @@
+"""DimeNet (Gasteiger et al., arXiv:2003.03123): directional message
+passing with radial-Bessel + angular bases over edge-edge triplets.
+Config: 6 blocks, d=128, 8 bilinear units, 7 angular x 6 radial basis fns.
+
+TPU adaptation (DESIGN.md §2): the original's spherical-Bessel x spherical
+-harmonic SBF is replaced by an equivalent-rank separable basis
+(radial Bessel ⊗ cosine Chebyshev in the angle) — same tensor shape
+(n_spherical x n_radial), branch-free transcendentals only, preserving the
+triplet dataflow that is the kernel-relevant part of the architecture.
+The triplet gather (k->j edges interacting with j->i edges) is the
+quadratic hot spot; its table is host-built (`build_triplets`) and
+sentinel-padded to a static budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.segment import segment_sum
+from repro.models.gnn.common import GraphBatch, edge_vectors
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 10.0
+    n_atom_types: int = 100
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: DimeNetConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    nsb = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, 5)
+
+    def block_init(k):
+        kk = jax.random.split(k, 6)
+        return {
+            "w_sbf": dense_init(kk[0], nsb, nb, dtype),
+            "w_kj": dense_init(kk[1], d, nb, dtype),
+            "bilinear": jax.random.normal(kk[2], (nb, nb, d), dtype) * 0.05,
+            "w_rbf": dense_init(kk[3], cfg.n_radial, d, dtype),
+            "w_msg1": dense_init(kk[4], d, d, dtype),
+            "w_msg2": dense_init(kk[5], d, d, dtype),
+        }
+
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.n_atom_types, d), dtype) * 0.1,
+        "w_edge_in": dense_init(ks[1], 2 * d + cfg.n_radial, d, dtype),
+        "blocks": jax.vmap(block_init)(jax.random.split(ks[2], cfg.n_blocks)),
+        "w_out1": dense_init(ks[3], d, d, dtype),
+        "w_out2": dense_init(ks[4], d, 1, dtype),
+    }
+
+
+def bessel_rbf(dist, n_radial: int, cutoff: float):
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d = jnp.clip(dist / cutoff, 1e-4, 1.0)
+    return (2.0 / cutoff) ** 0.5 * jnp.sin(
+        jnp.pi * n[None, :] * d[:, None]
+    ) / (d[:, None] * cutoff)
+
+
+def angular_basis(cos_angle, n_spherical: int):
+    """Chebyshev cos(l·θ) basis, l = 0..n_spherical-1 (separable stand-in
+    for the spherical-harmonic factor)."""
+    theta = jnp.arccos(jnp.clip(cos_angle, -1.0 + 1e-6, 1.0 - 1e-6))
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    return jnp.cos(theta[:, None] * l[None, :])
+
+
+def forward(cfg: DimeNetConfig, params, g: GraphBatch):
+    n = g.n_nodes
+    E = g.n_edges
+    x = params["embed"][jnp.clip(g.atom_type, 0, cfg.n_atom_types - 1)]
+    unit, dist, ok = edge_vectors(g)
+    rbf = bessel_rbf(dist, cfg.n_radial, cfg.cutoff) * ok[:, None]
+    src_c = jnp.clip(g.src, 0, n - 1)
+    dst_c = jnp.clip(g.dst, 0, n - 1)
+    # initial edge message m_ji from endpoint embeddings + rbf
+    m = jnp.tanh(
+        jnp.concatenate([x[src_c], x[dst_c], rbf], -1) @ params["w_edge_in"]
+    ) * ok[:, None]
+
+    # triplet geometry: angle at j between (j->i) and (j->k) = -(k->j)
+    kj = jnp.clip(g.trip_kj, 0, E - 1)
+    ji = jnp.clip(g.trip_ji, 0, E - 1)
+    t_ok = (g.trip_kj < E) & (g.trip_ji < E)
+    cos_angle = jnp.sum(unit[ji] * (-unit[kj]), -1)
+    ang = angular_basis(cos_angle, cfg.n_spherical)          # [T, S]
+    sbf = (ang[:, :, None] * bessel_rbf(dist[kj], cfg.n_radial, cfg.cutoff)[
+        :, None, :
+    ]).reshape(-1, cfg.n_spherical * cfg.n_radial)
+    sbf = sbf * t_ok[:, None]
+    seg_ji = jnp.where(t_ok, ji, E)
+
+    def body(m, bp):
+        # directional interaction: messages k->j modulate j->i
+        a = sbf @ bp["w_sbf"]                                # [T, nb]
+        b = (m @ bp["w_kj"])[kj]                             # [T, nb]
+        inter = jnp.einsum("ta,tb,abd->td", a, b, bp["bilinear"])
+        agg = segment_sum(inter, seg_ji, E)                  # [E, d]
+        upd = jnp.tanh(rbf @ bp["w_rbf"]) * jnp.tanh(
+            (m + agg) @ bp["w_msg1"]
+        )
+        return m + upd @ bp["w_msg2"], None
+
+    m, _ = jax.lax.scan(body, m, params["blocks"])
+    # readout: edge messages -> receiving atoms -> graph energy
+    seg_dst = jnp.where((g.dst < n) & ok, g.dst, n)
+    atom = segment_sum(jnp.tanh(m @ params["w_out1"]), seg_dst, n)
+    atom_e = atom @ params["w_out2"]
+    gid = g.graph_id if g.graph_id is not None else jnp.zeros((n,), jnp.int32)
+    num_graphs = int(g.labels.shape[0]) if g.labels is not None else 1
+    return segment_sum(atom_e[:, 0], gid, num_graphs)
+
+
+def loss_fn(cfg: DimeNetConfig, params, g: GraphBatch):
+    energy = forward(cfg, params, g)
+    return jnp.mean((energy - g.labels.astype(jnp.float32)) ** 2)

@@ -1,0 +1,71 @@
+"""GAT (Veličković et al., arXiv:1710.10903), Cora config: 2 layers,
+8 hidden units x 8 heads then 1 output head.  SDDMM edge scores ->
+segment-softmax over destinations -> weighted SpMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.segment import segment_softmax, segment_sum
+from repro.models.gnn.common import GraphBatch
+from repro.models.layers import dense_init, softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: GATConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2 * cfg.n_layers)
+    params = {}
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        params[f"W{i}"] = dense_init(ks[2 * i], d_in, heads * d_out, dtype)
+        params[f"a_src{i}"] = (
+            jax.random.normal(ks[2 * i + 1], (heads, d_out), dtype) * 0.1
+        )
+        params[f"a_dst{i}"] = jnp.zeros((heads, d_out), dtype)
+        d_in = heads * d_out
+    return params
+
+
+def forward(cfg: GATConfig, params, g: GraphBatch):
+    n = g.n_nodes
+    h = g.node_feat
+    src_c = jnp.clip(g.src, 0, n - 1)
+    dst_c = jnp.clip(g.dst, 0, n - 1)
+    seg_dst = jnp.where(g.dst < n, g.dst, n)
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        wh = (h @ params[f"W{i}"]).reshape(-1, heads, d_out)
+        s_src = jnp.einsum("nhd,hd->nh", wh, params[f"a_src{i}"])
+        s_dst = jnp.einsum("nhd,hd->nh", wh, params[f"a_dst{i}"])
+        scores = jax.nn.leaky_relu(
+            s_src[src_c] + s_dst[dst_c], cfg.negative_slope
+        )
+        alpha = segment_softmax(scores, seg_dst, n)  # [E, H]
+        msgs = alpha[:, :, None] * wh[src_c]
+        agg = segment_sum(msgs.reshape(-1, heads * d_out), seg_dst, n)
+        h = agg if last else jax.nn.elu(agg)
+    return h
+
+
+def loss_fn(cfg: GATConfig, params, g: GraphBatch):
+    return softmax_xent(forward(cfg, params, g), g.labels, mask=g.label_mask)

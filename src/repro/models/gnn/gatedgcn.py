@@ -1,0 +1,90 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553; benchmarking config of
+arXiv:2003.00982: 16 layers, d_hidden=70, gated edge aggregation).
+
+    e_ij' = e_ij + ReLU(N(A h_i + B h_j + C e_ij))
+    h_i'  = h_i + ReLU(N(U h_i + Σ_j σ(e_ij') ⊙ V h_j / (Σ_j σ(e_ij') + ε)))
+
+Layers are scanned (stacked params); aggregation is segment_sum over the
+edge list (the framework's SpMM substrate — swappable for the Pallas
+segsum kernel via ``use_pallas_segsum`` in the trainer).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.segment import segment_sum
+from repro.models.gnn.common import GraphBatch
+from repro.models.layers import dense_init, layernorm, softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    n_classes: int = 16
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: GatedGCNConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 4)
+
+    def layer_init(k):
+        kk = jax.random.split(k, 5)
+        return {
+            "A": dense_init(kk[0], d, d, dtype),
+            "B": dense_init(kk[1], d, d, dtype),
+            "C": dense_init(kk[2], d, d, dtype),
+            "U": dense_init(kk[3], d, d, dtype),
+            "V": dense_init(kk[4], d, d, dtype),
+            "ln_h_w": jnp.ones((d,), dtype),
+            "ln_h_b": jnp.zeros((d,), dtype),
+            "ln_e_w": jnp.ones((d,), dtype),
+            "ln_e_b": jnp.zeros((d,), dtype),
+        }
+
+    return {
+        "embed_h": dense_init(ks[0], cfg.d_in, d, dtype),
+        "embed_e": jnp.zeros((1, d), dtype),
+        "layers": jax.vmap(layer_init)(jax.random.split(ks[1], cfg.n_layers)),
+        "readout": dense_init(ks[2], d, cfg.n_classes, dtype),
+    }
+
+
+def forward(cfg: GatedGCNConfig, params, g: GraphBatch):
+    n = g.n_nodes
+    h = g.node_feat @ params["embed_h"]
+    e = jnp.broadcast_to(params["embed_e"], (g.n_edges, cfg.d_hidden))
+    src_c = jnp.clip(g.src, 0, n - 1)
+    dst_c = jnp.clip(g.dst, 0, n - 1)
+    seg_dst = jnp.where(g.dst < n, g.dst, n)
+
+    def body(carry, lp):
+        h, e = carry
+        hi = h[dst_c]          # receiving endpoint i per edge (j -> i)
+        hj = h[src_c]
+        e_new = e + jax.nn.relu(
+            layernorm(hi @ lp["A"] + hj @ lp["B"] + e @ lp["C"],
+                      lp["ln_e_w"], lp["ln_e_b"])
+        )
+        gate = jax.nn.sigmoid(e_new)
+        num = segment_sum(gate * (hj @ lp["V"]), seg_dst, n)
+        den = segment_sum(gate, seg_dst, n) + 1e-6
+        h_new = h + jax.nn.relu(
+            layernorm(h @ lp["U"] + num / den, lp["ln_h_w"], lp["ln_h_b"])
+        )
+        return (h_new, e_new), None
+
+    (h, _), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return h @ params["readout"]
+
+
+def loss_fn(cfg: GatedGCNConfig, params, g: GraphBatch):
+    logits = forward(cfg, params, g)
+    return softmax_xent(logits, g.labels, mask=g.label_mask)

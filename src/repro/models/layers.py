@@ -1,0 +1,121 @@
+"""Shared pure-JAX building blocks (no flax): params are plain dict
+pytrees; every module is an ``init(key, ...) -> params`` plus a pure
+``apply``.  Matmul-bearing params are created with named logical axes so
+the sharding layer (distributed/sharding.py) can map them onto the mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm(x, weight, *, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight)).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * weight + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_freqs(d_head: int, theta: float, positions: jnp.ndarray):
+    """positions int32[...]; returns (cos, sin) of shape positions.shape + (d_head/2,)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [..., S, H, D]; cos/sin broadcastable to [..., S, 1, D/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu_mlp(params, x, *, act: str = "silu"):
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    if act == "silu":
+        gate = jax.nn.silu(gate)
+    elif act == "gelu":
+        gate = jax.nn.gelu(gate, approximate=True)
+    elif act == "relu":
+        gate = jax.nn.relu(gate)
+    else:
+        raise ValueError(act)
+    return (gate * up) @ params["w_down"]
+
+
+def mlp_stack_init(key, dims: tuple[int, ...], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_stack(params, x, *, n: int, act=jax.nn.relu, final_act=None):
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------- losses
+
+def softmax_xent(logits, labels, *, mask=None):
+    """logits [..., V] f32-upcast; labels int32[...] (-1 = ignore)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0, logits.shape[-1] - 1)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - ll
+    keep = labels >= 0
+    if mask is not None:
+        keep = keep & mask
+    nll = jnp.where(keep, nll, 0.0)
+    return nll.sum() / jnp.maximum(keep.sum(), 1)
+
+
+def bce_logits(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

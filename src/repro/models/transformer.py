@@ -1,0 +1,363 @@
+"""Decoder-only transformer LM (llama/gemma3 families) with optional MoE.
+
+Design points that matter at scale:
+
+  * **scan over layers** — params are stacked [L, ...] and the block is a
+    single ``jax.lax.scan`` body: one layer compiles once (64x faster
+    compiles for the dry-run) and remat applies per-block;
+  * **per-layer window as data, not code** — gemma3's 5:1 local:global
+    pattern is a scanned int32 vector ``window[L]`` (local layers carry the
+    window size, global layers carry ``>= seq_len``), so one code path
+    serves both and the scan stays homogeneous;
+  * **GQA** natively (n_kv_heads <= n_heads); RoPE; RMSNorm; SwiGLU/GeGLU;
+  * decode path keeps a [L, B, Hkv, T, D] KV cache updated with
+    ``dynamic_update_slice`` — for long-context cells the cache's T axis is
+    sharded (context parallelism) and the decode attention is written as
+    reductions over T so GSPMD lowers it to flash-decode-style partial
+    max/sum + psum instead of gathering the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    embed_init,
+    glu_mlp,
+    glu_mlp_init,
+    rmsnorm,
+    rope_freqs,
+    softmax_xent,
+)
+from repro.models.moe import MoEConfig, moe_ffn, moe_ffn_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    window: Optional[int] = None   # sliding window of local layers
+    global_every: int = 0          # gemma3: every 6th layer global (5:1)
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    qk_norm: bool = False
+    tie_embeddings: bool = True
+    moe: Optional[MoEConfig] = None
+    dtype: str = "float32"
+    # perf knobs (§Perf): remat policy for the scanned block; attention
+    # implementation ("dense" = naive S x T probs, "chunked" = online-
+    # softmax scan over KV blocks — the flash trick at the XLA level)
+    remat: str = "block"            # "block" | "none"
+    attn_impl: str = "dense"        # "dense" | "chunked"
+    attn_chunk: int = 1024
+    # unroll the KV-chunk scan: identical math/memory, but XLA cost
+    # analysis then counts every chunk (nested-scan bodies are otherwise
+    # counted once) — used for §Perf measurement runs
+    attn_unroll: bool = False
+    act_dtype: str = "float32"      # compute/activation dtype
+
+    @property
+    def layer_windows(self) -> list[int | None]:
+        if self.window is None or self.global_every <= 0:
+            return [self.window] * self.n_layers
+        return [
+            None if (i + 1) % self.global_every == 0 else self.window
+            for i in range(self.n_layers)
+        ]
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hq = self.n_heads * self.d_head
+        hk = self.n_kv_heads * self.d_head
+        attn = d * hq + 2 * d * hk + hq * d
+        if self.moe is not None:
+            ffn = self.moe.param_count(d)
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        per_layer_ffn = self.moe.active_param_count(d) - self.moe.param_count(d)
+        return self.param_count() + self.n_layers * per_layer_ffn
+
+
+# ------------------------------------------------------------------ params
+
+def init_params(key, cfg: LMConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    hq = cfg.n_heads * cfg.d_head
+    hk = cfg.n_kv_heads * cfg.d_head
+
+    def layer_init(k):
+        ks = jax.random.split(k, 6)
+        p = {
+            "ln_attn": jnp.zeros((d,), dtype),
+            "ln_mlp": jnp.zeros((d,), dtype),
+            "wq": dense_init(ks[0], d, hq, dtype),
+            "wk": dense_init(ks[1], d, hk, dtype),
+            "wv": dense_init(ks[2], d, hk, dtype),
+            "wo": dense_init(ks[3], hq, d, dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((cfg.d_head,), dtype)
+            p["k_norm"] = jnp.zeros((cfg.d_head,), dtype)
+        if cfg.moe is not None:
+            p["moe"] = moe_ffn_init(ks[4], cfg.moe, d, dtype)
+        else:
+            p["mlp"] = glu_mlp_init(ks[4], d, cfg.d_ff, dtype)
+        return p
+
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    layers = jax.vmap(layer_init)(layer_keys)  # stacked [L, ...]
+    params = {
+        "embed": embed_init(keys[1], cfg.vocab, d, dtype),
+        "ln_final": jnp.zeros((d,), dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(keys[2], cfg.vocab, d, dtype)
+    return params
+
+
+# ------------------------------------------------------------------ attention
+
+def _attend(q, k, v, *, window, kv_offset, causal=True):
+    """q [B,S,Hq,D], k/v [B,T,Hkv,D]; ``window`` traced int32 (>=T => full).
+
+    Written as explicit max/exp/sum reductions over T so GSPMD can keep T
+    sharded (context parallelism) and insert psum collectives.
+    """
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    qr = q.reshape(b, s, hkv, rep, dh)
+    logits = jnp.einsum("bshrd,bthd->bhrst", qr, k).astype(jnp.float32)
+    logits *= dh ** -0.5
+    qpos = jnp.arange(s)[:, None] + kv_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = (qpos - kpos < window) & (kpos <= qpos if causal else True)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhrst,bthd->bshrd", (p / denom).astype(q.dtype), v)
+    return out.reshape(b, s, hq * dh)
+
+
+def _attend_chunked(q, k, v, *, window, kv_offset, chunk: int, causal=True,
+                    unroll: bool = False):
+    """Online-softmax attention, scanned over KV chunks: never materializes
+    the S x T probability matrix (the FlashAttention trick expressed at the
+    XLA level — peak memory O(S·chunk) instead of O(S·T))."""
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    n_chunks = -(-t // chunk)
+    tp = n_chunks * chunk
+    if tp != t:
+        k = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    qr = q.reshape(b, s, hkv, rep, dh)
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(s)[:, None] + kv_offset
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, ci = xs
+        logits = jnp.einsum("bshrd,bthd->bhrst", qr, kb).astype(jnp.float32)
+        logits *= dh ** -0.5
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = (qpos - kpos < window) & (kpos < t)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_run, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhrst,bthd->bhrsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, rep, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, s, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)),
+        unroll=n_chunks if unroll else 1,
+    )
+    out = (acc / jnp.maximum(l_f, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq * dh)
+
+
+def _layer(cfg: LMConfig, lp, x, *, window, positions, cache=None,
+           cache_index=None):
+    b, s, d = x.shape
+    if jnp.dtype(cfg.act_dtype) != jnp.dtype(cfg.dtype):
+        # mixed precision: f32 master weights, act_dtype compute
+        lp = jax.tree.map(
+            lambda v_: v_.astype(cfg.act_dtype) if v_.ndim >= 2 else v_, lp
+        )
+    h = rmsnorm(x, lp["ln_attn"], eps=cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"], eps=cfg.norm_eps)
+        k = rmsnorm(k, lp["k_norm"], eps=cfg.norm_eps)
+    cos, sin = rope_freqs(cfg.d_head, cfg.rope_theta, positions)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    new_cache = None
+    if cache is not None:
+        from repro.distributed.constrain import maybe_constrain
+
+        ck, cv = cache
+        # DECODE ONLY: replicate the (tiny) one-token k/v across the model
+        # axis BEFORE the cache update — otherwise GSPMD all-gathers the
+        # multi-GB cache to reconcile it with the TP-head-sharded
+        # projections (§Perf: gemma3-4b decode_32k, 91 GB/step -> ~0).
+        # During prefill k/v are S-long: leave them sharded.
+        if s == 1:
+            k = maybe_constrain(k.astype(ck.dtype), None, None, None, None)
+            v = maybe_constrain(v.astype(cv.dtype), None, None, None, None)
+        else:
+            k = k.astype(ck.dtype)
+            v = v.astype(cv.dtype)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_index, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        kv_offset = cache_index
+    else:
+        kv_offset = 0
+    if cfg.attn_impl == "chunked" and s > 1:
+        # online-softmax over KV chunks (prefill/train); decode (s == 1)
+        # keeps the reduction form that context-parallelizes over T
+        attn = _attend_chunked(q, k, v, window=window, kv_offset=kv_offset,
+                               chunk=cfg.attn_chunk, unroll=cfg.attn_unroll)
+    else:
+        attn = _attend(q, k, v, window=window, kv_offset=kv_offset)
+    x = x + attn @ lp["wo"]
+    h = rmsnorm(x, lp["ln_mlp"], eps=cfg.norm_eps)
+    if cfg.moe is not None:
+        ff, aux = moe_ffn(lp["moe"], cfg.moe, h)
+    else:
+        ff, aux = glu_mlp(lp["mlp"], h, act=cfg.act), 0.0
+    return x + ff, new_cache, aux
+
+
+def _windows_array(cfg: LMConfig, full: int) -> jnp.ndarray:
+    return jnp.asarray(
+        [full if w is None else w for w in cfg.layer_windows], dtype=jnp.int32
+    )
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(cfg: LMConfig, params, tokens):
+    """tokens int32[B, S] -> logits f32[B, S, V] (+ aux losses)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    x = x * (cfg.d_model ** 0.5)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    windows = _windows_array(cfg, s)
+
+    def body(carry, scanned):
+        x = carry
+        lp, w = scanned
+        x, _, aux = _layer(cfg, lp, x, window=w, positions=positions)
+        return x, aux
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, (params["layers"], windows))
+    x = rmsnorm(x, params["ln_final"], eps=cfg.norm_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = x @ unembed.T
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(cfg: LMConfig, params, tokens, labels):
+    logits, aux = forward(cfg, params, tokens)
+    return softmax_xent(logits, labels) + 0.01 * aux
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.float32):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def decode_step(cfg: LMConfig, params, cache, token, index):
+    """One-token decode. token int32[B, 1]; index: current position scalar.
+
+    cache: (k, v) each [L, B, T, Hkv, D].  Returns (logits [B, V], cache).
+    """
+    ck, cv = cache
+    b = token.shape[0]
+    t = ck.shape[2]
+    x = params["embed"][token].astype(jnp.dtype(cfg.act_dtype))
+    x = x * (cfg.d_model ** 0.5)
+    positions = jnp.broadcast_to(index, (b, 1)).astype(jnp.int32)
+    windows = _windows_array(cfg, t)
+
+    def body(x, scanned):
+        lp, w, lk, lv = scanned
+        x, new_cache, _ = _layer(
+            cfg, lp, x, window=w, positions=positions,
+            cache=(lk, lv), cache_index=index,
+        )
+        return x, new_cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], windows, ck, cv))
+    x = rmsnorm(x, params["ln_final"], eps=cfg.norm_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = (x @ unembed.T)[:, 0]
+    return logits, caches
+
+
+def prefill(cfg: LMConfig, params, tokens, max_len: int):
+    """Run the prompt, returning (last-position logits, filled cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.act_dtype))
+    x = x * (cfg.d_model ** 0.5)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    windows = _windows_array(cfg, max_len)
+    ck, cv = init_cache(cfg, b, max_len, x.dtype)
+
+    def body(x, scanned):
+        lp, w, lk, lv = scanned
+        x, new_cache, _ = _layer(
+            cfg, lp, x, window=w, positions=positions,
+            cache=(lk, lv), cache_index=0,
+        )
+        return x, new_cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], windows, ck, cv))
+    x = rmsnorm(x, params["ln_final"], eps=cfg.norm_eps)
+    unembed = params.get("unembed", params["embed"])
+    return (x[:, -1] @ unembed.T), caches

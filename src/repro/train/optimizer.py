@@ -1,0 +1,138 @@
+"""Pure-JAX optimizers: AdamW and Adafactor (factored second moment — the
+memory-term lever for the large cells), plus global-norm clipping and a
+linear-warmup cosine schedule.  API mirrors optax (init/update) without the
+dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# ------------------------------------------------------------------ adamw
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"mu": zeros, "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu / (1 - b1 ** count.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(g, mu, nu, p)
+           for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}
+
+
+# ------------------------------------------------------------------ adafactor
+
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"v": jax.tree.map(one, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    beta2 = 1.0 - count.astype(jnp.float32) ** -0.8
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        if p.ndim >= 2:
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g32 * g32, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g32 * g32, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            denom = jnp.sqrt(r[..., None] * vc[..., None, :] + cfg.eps)
+            step = g32 / denom
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta2 * v["v"] + (1 - beta2) * g32 * g32}
+            step = g32 / jnp.sqrt(nv["v"] + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nv
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        {"v": tdef.unflatten([o[1] for o in out]), "count": count},
+    )
+
+
+# ------------------------------------------------------------------ facade
+
+def opt_init(cfg: OptConfig, params) -> Any:
+    return adafactor_init(params) if cfg.kind == "adafactor" else adamw_init(params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.kind == "adafactor":
+        new_p, new_s = adafactor_update(cfg, grads, state, params)
+    else:
+        new_p, new_s = adamw_update(cfg, grads, state, params)
+    return new_p, new_s, gn

@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS manipulation here — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py (and the
+subprocess-based multi-device tests) request placeholder devices."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.graph.csr import from_edges
+
+
+def nx_triangles(edges: np.ndarray, n: int) -> int:
+    import networkx as nx
+
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(np.asarray(edges))
+    G.remove_edges_from(nx.selfloop_edges(G))
+    return sum(nx.triangles(G).values()) // 3
+
+
+FIXTURES = {
+    "karate": gen.karate(),
+    "ring_of_cliques": gen.ring_of_cliques(5, 6),
+    "er200": gen.erdos_renyi(200, 0.05, seed=3),
+    "rmat8": gen.rmat(8, 8, seed=1),
+    "complete9": gen.complete(9),
+    "dolphins_like": gen.dolphins_like(),
+    "geometric": gen.random_geometric(80, 0.25, seed=2),
+}
+
+
+@pytest.fixture(params=sorted(FIXTURES))
+def named_graph(request):
+    edges, n = FIXTURES[request.param]
+    return request.param, edges, n, from_edges(edges, n)

@@ -1,0 +1,68 @@
+"""Deliverable (e) regression: representative cells must lower+compile on
+the production meshes (subprocess with 512 forced host devices).  The full
+41-cell x 2-mesh sweep runs via `python -m repro.launch.dryrun`; this test
+pins one cell per family so regressions surface in pytest."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_representative_cells_compile_on_pod_mesh():
+    body = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.dryrun import collective_bytes, run_cell
+
+    mesh = make_production_mesh()
+    cells = [
+        ("gat-cora", "full_graph_sm"),     # gnn
+        ("smollm-135m", "decode_32k"),     # lm decode
+        ("bst", "serve_p99"),              # recsys
+        ("cover-edge-tc", "rmat_smoke"),   # the paper's workload
+    ]
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, mesh)
+        assert rec["status"] == "ok", (arch, shape, rec)
+        assert rec["hlo_flops"] > 0
+        print(arch, shape, "ok")
+    # long_500k skip policy is enforced
+    rec = run_cell("phi3.5-moe-42b-a6.6b", "long_500k", mesh)
+    assert rec["status"] == "skipped"
+    print("DRYRUN_CELLS_OK")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DRYRUN_CELLS_OK" in out.stdout
+
+
+def test_collective_bytes_parser():
+    # import-safe module (dryrun itself mutates XLA_FLAGS at import)
+    from repro.launch.hlo_analysis import collective_bytes
+
+    hlo = """
+      %ar = f32[16,4096,576]{2,1,0} all-reduce(%x), replica_groups=...
+      %ag.1 = (f32[8,128], f32[8,2048]) all-gather-start(%y), dim=1
+      %ag.2 = f32[8,2048]{1,0} all-gather-done(%ag.1)
+      %a2a = s32[4,256]{1,0} all-to-all(%z)
+      %other = f32[2,2]{1,0} add(%a, %b)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 2 * 16 * 4096 * 576 * 4  # 2x AR factor
+    assert out["all-gather"] == (8 * 128 + 8 * 2048) * 4
+    assert out["all-to-all"] == 4 * 256 * 4
+    assert out["count"] == 3

@@ -1,0 +1,125 @@
+"""Graph container, partitioner, binary search, segment ops, sampler."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as gen
+from repro.graph.csr import bounded_binary_search, from_edges, max_degree
+from repro.graph.partition import shard_edges, vertex_partition
+from repro.graph.sampler import sample_blocks
+from repro.graph.segment import embedding_bag, segment_mean, segment_softmax
+
+
+def test_csr_roundtrip_karate():
+    edges, n = gen.karate()
+    g = from_edges(edges, n)
+    assert g.n_nodes == 34
+    assert int(g.n_edges_dir) == 2 * 78
+    assert int(jnp.sum(g.deg)) == 2 * 78
+    # CSR slices are sorted and match adjacency
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    row = np.asarray(g.row_offsets)
+    adj = {i: set() for i in range(n)}
+    for a, b in edges:
+        adj[a].add(b), adj[b].add(a)
+    for v in range(n):
+        sl = dst[row[v]: row[v + 1]]
+        assert list(sl) == sorted(adj[v])
+        assert (src[row[v]: row[v + 1]] == v).all()
+
+
+def test_padding_and_dedup():
+    edges = np.array([[0, 1], [1, 0], [0, 1], [2, 2], [1, 2]])
+    g = from_edges(edges, 3, num_slots=16)
+    assert g.num_slots == 16
+    assert int(g.n_edges_dir) == 4  # {0-1, 1-2} symmetrized
+    assert int(jnp.sum(g.src == 3)) == 12  # sentinel padding
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 49), min_size=0, max_size=60), st.integers(0, 60))
+def test_bounded_binary_search_matches_numpy(vals, q):
+    arr = np.sort(np.asarray(vals + [10 ** 6], dtype=np.int32))  # non-empty
+    found = bool(
+        bounded_binary_search(
+            jnp.asarray(arr),
+            jnp.asarray([0]),
+            jnp.asarray([len(vals)]),
+            jnp.asarray([q]),
+            num_steps=8,
+        )[0]
+    )
+    assert found == (q in vals)
+
+
+def test_vertex_partition_balance():
+    edges, n = gen.rmat(9, 8, seed=0)
+    g = from_edges(edges, n)
+    for p in (2, 4, 8):
+        bounds = vertex_partition(np.asarray(g.row_offsets), p)
+        assert bounds[0] == 0 and bounds[-1] == n
+        row = np.asarray(g.row_offsets)
+        sizes = row[bounds[1:]] - row[bounds[:-1]]
+        m2 = int(g.n_edges_dir)
+        assert sizes.sum() == m2
+        assert sizes.max() <= 2 * m2 / p + max_degree(g)  # paper's ~2m/p
+
+
+def test_shard_edges_covers_all_edges():
+    edges, n = gen.erdos_renyi(100, 0.08, seed=5)
+    g = from_edges(edges, n)
+    s_sh, d_sh, counts, _ = shard_edges(g, 4)
+    got = set()
+    for i in range(4):
+        for j in range(int(counts[i])):
+            got.add((int(s_sh[i, j]), int(d_sh[i, j])))
+    want = set(zip(np.asarray(g.src)[: int(g.n_edges_dir)],
+                   np.asarray(g.dst)[: int(g.n_edges_dir)]))
+    assert got == want
+
+
+def test_segment_softmax_normalizes():
+    scores = jnp.asarray([0.1, 2.0, -1.0, 3.0, 0.0])
+    seg = jnp.asarray([0, 0, 1, 1, 5])  # last one dropped (out of range)
+    out = segment_softmax(scores, seg, 2)
+    np.testing.assert_allclose(float(out[0] + out[1]), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(float(out[2] + out[3]), 1.0, rtol=1e-6)
+
+
+def test_segment_mean_and_embedding_bag():
+    table = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    idx = jnp.asarray([0, 1, 2, 5])
+    bags = jnp.asarray([0, 0, 1, 9])  # last dropped
+    out = embedding_bag(table, idx, bags, 2, mode="sum")
+    np.testing.assert_allclose(np.asarray(out[0]), [2.0, 4.0])
+    np.testing.assert_allclose(np.asarray(out[1]), [4.0, 5.0])
+    mean = segment_mean(table[idx], bags, 2)
+    np.testing.assert_allclose(np.asarray(mean[0]), [1.0, 2.0])
+
+
+def test_sampler_shapes_and_edges_valid():
+    edges, n = gen.rmat(8, 8, seed=2)
+    g = from_edges(edges, n)
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    nodes, src_l, dst_l, seed_mask = sample_blocks(
+        jax.random.key(0), g.row_offsets, g.dst, g.deg, seeds, (5, 3), n
+    )
+    n_sub = 16 + 16 * 5 + 16 * 5 * 3
+    assert nodes.shape == (n_sub,)
+    assert src_l.shape == dst_l.shape == (16 * 5 + 16 * 5 * 3,)
+    assert int(seed_mask.sum()) == 16
+    # every non-padded sampled edge is a real graph edge
+    nodes_np, src_np, dst_np = map(np.asarray, (nodes, src_l, dst_l))
+    real = set(zip(np.asarray(g.src)[: int(g.n_edges_dir)],
+                   np.asarray(g.dst)[: int(g.n_edges_dir)]))
+    checked = 0
+    for s, d in zip(src_np, dst_np):
+        if d < n_sub and nodes_np[s] < n and nodes_np[d] < n:
+            # sampled edge goes child(s) -> parent(d); graph edge is (parent, child)
+            assert (int(nodes_np[d]), int(nodes_np[s])) in real
+            checked += 1
+    assert checked > 0

@@ -1,0 +1,68 @@
+"""Flash attention kernel vs masked-softmax oracle: shape/dtype/mask sweeps."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _mk(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,t,d,causal,window,kv_offset",
+    [
+        (2, 4, 2, 256, 256, 64, True, None, 0),     # GQA causal
+        (1, 4, 1, 200, 200, 64, True, 96, 0),       # MQA sliding window
+        (1, 2, 2, 128, 384, 32, True, None, 256),   # chunked prefill
+        (1, 8, 8, 130, 130, 64, False, None, 0),    # bidirectional, ragged
+        (1, 1, 1, 1, 512, 128, True, None, 511),    # decode step (q_len=1)
+        (1, 3, 3, 64, 64, 128, True, 17, 0),        # odd heads, tiny window
+    ],
+)
+def test_mask_and_shape_sweep(b, hq, hkv, s, t, d, causal, window, kv_offset):
+    rng = np.random.default_rng(s * 7 + t)
+    q = _mk(rng, b, hq, s, d)
+    k = _mk(rng, b, hkv, t, d)
+    v = _mk(rng, b, hkv, t, d)
+    out_k = flash_attention(q, k, v, causal=causal, window=window,
+                            kv_offset=kv_offset)
+    out_r = attention_ref(q, k, v, causal=causal, window=window,
+                          kv_offset=kv_offset)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16():
+    rng = np.random.default_rng(3)
+    q = _mk(rng, 1, 2, 128, 64, dtype=np.float32).astype(jnp.bfloat16)
+    k = _mk(rng, 1, 2, 128, 64, dtype=np.float32).astype(jnp.bfloat16)
+    v = _mk(rng, 1, 2, 128, 64, dtype=np.float32).astype(jnp.bfloat16)
+    out_k = flash_attention(q, k, v, causal=True)
+    out_r = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out_k, dtype=np.float32),
+        np.asarray(out_r, dtype=np.float32), rtol=2e-2, atol=2e-2,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(1, 2), st.sampled_from([1, 2, 4]), st.integers(1, 150),
+    st.integers(0, 10 ** 6), st.booleans(),
+)
+def test_property_ragged_lengths(b, hq, s, seed, causal):
+    rng = np.random.default_rng(seed)
+    d = 32
+    q = _mk(rng, b, hq, s, d)
+    k = _mk(rng, b, hq, s, d)
+    v = _mk(rng, b, hq, s, d)
+    out_k = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    out_r = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=3e-5, atol=3e-5)
