@@ -1,20 +1,30 @@
 """Benchmark harness entry point — one function per paper table/claim.
 Prints ``name,us_per_call,derived`` CSV rows (plus the detailed tables).
 
+Usage: ``python benchmarks/run.py [bench ...]`` — any of the names below;
+no argument runs everything.
+
   table1   -> Table I communication volumes (closed-form, vs paper)
   k_frac   -> §V-C: k ≈ 0.65 on Graph500 RMAT
-  tc       -> §III/IV: cover-edge vs wedge-iterator runtime + edge
-              examination reduction
+  tc       -> §III/IV: compacted cover-edge pipeline vs the dense seed
+              path vs wedge-iterator; also writes ``results/BENCH_tc.json``
+              so the perf trajectory is tracked across PRs
   parallel -> measured wire bytes of Alg. 2's collectives vs the wedge
               baseline's (p = 8 simulated on one host, subprocess)
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)  # `python benchmarks/run.py` just works
 
 
 def bench_table1():
@@ -40,15 +50,26 @@ def bench_k_fraction():
               f"k={r['k']:.3f}")
 
 
-def bench_tc():
+def bench_tc(scales=(10, 11, 12)):
     from benchmarks.tc_bench import measure
 
-    for scale in (10, 11):
+    rows = []
+    for scale in scales:
         r = measure(scale)
-        print(f"tc_cover_scale{scale},{r['cover_edge_s']*1e6:.0f},"
-              f"T={r['triangles']}")
-        print(f"tc_wedge_scale{scale},{r['wedge_iter_s']*1e6:.0f},"
+        rows.append(r)
+        print(f"tc_cover_scale{scale},{r['cover_s']*1e6:.0f},"
+              f"T={r['triangles']}|rows={r['probe_rows']}"
+              f"|speedup_vs_dense={r['speedup_vs_dense']:.2f}x")
+        print(f"tc_dense_scale{scale},{r['cover_dense_s']*1e6:.0f},"
+              f"rows={r['dense_rows']}")
+        print(f"tc_wedge_scale{scale},{r['wedge_s']*1e6:.0f},"
               f"reduction={r['examination_reduction']:.2f}x")
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "BENCH_tc.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"tc_json,0,written={os.path.normpath(out)}")
 
 
 def bench_parallel():
@@ -101,13 +122,23 @@ def bench_roofline():
                     f"|peakGB={r['peak_gb']:.1f}")
 
 
-def main() -> None:
+BENCHES = {
+    "table1": bench_table1,
+    "k_frac": bench_k_fraction,
+    "tc": bench_tc,
+    "parallel": bench_parallel,
+    "roofline": bench_roofline,
+}
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    unknown = [a for a in argv if a not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    bench_table1()
-    bench_k_fraction()
-    bench_tc()
-    bench_parallel()
-    bench_roofline()
+    for name in argv or BENCHES:
+        BENCHES[name]()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,79 @@
+"""Version compatibility shims for the baked-in container toolchain.
+
+``jax.shard_map`` (and the varying-manual-axes machinery it implies:
+replication checking of ``while_loop`` carries, ``jax.lax.pvary``)
+graduated from ``jax.experimental.shard_map`` only in newer JAX
+releases; the container pins an older one.  Import from here so every
+call site works on both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5: still under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    @functools.wraps(_shard_map_exp)
+    def shard_map(f, **kwargs):
+        # the old replication checker has no rule for while_loop (used by
+        # BFS); the new-style code is vma-correct, so skip the check
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_exp(f, **kwargs)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` fallback: with ``check_rep=False`` shard_map the
+    varying-axis annotation is a no-op, which is exactly what the old
+    API's unchecked mode assumes."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_names) if fn is not None else x
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` fallback.  Old JAX: ``Mesh`` is itself a context
+    manager establishing the resource environment, which is all the
+    explicit-sharding code here relies on."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    use = getattr(jax.sharding, "use_mesh", None)
+    if use is not None:
+        return use(mesh)
+    return mesh
+
+
+class _EmptyMesh:
+    axis_names = ()
+
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` fallback: the mesh installed by
+    the active ``Mesh`` context manager (old JAX resource env), or an
+    empty stand-in whose ``axis_names`` is ``()`` — the only attribute
+    callers consult."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax.interpreters.pxla import thread_resources
+
+        return thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return _EmptyMesh()
+
+
+def cost_analysis(compiled):
+    """Normalize ``Compiled.cost_analysis()``: newer JAX returns one dict,
+    older returns a one-per-computation list of dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
+__all__ = ["shard_map", "pvary", "set_mesh", "get_abstract_mesh",
+           "cost_analysis"]

@@ -14,7 +14,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs.lm import LM_SHAPES, LONG_CONTEXT_OK
 from repro.distributed import sharding as sh
@@ -357,7 +360,7 @@ def _tc_cell(cfg: dict, shape_name: str, mesh: Mesh) -> Cell:
         triangles=P(), per_device=P("p"), k=P(), num_horizontal=P(),
         transpose_overflow=P(), hedge_overflow=P(), recv_counts=P("p"),
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         fn_shard, mesh=tc_mesh, in_specs=(P("p"), P("p")),
         out_specs=out_specs,
     )

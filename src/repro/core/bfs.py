@@ -38,10 +38,21 @@ def bfs_levels(
     int32 is the naive baseline; "uint8" moves 4x fewer bytes per level
     (the frontier is 0/1 so max == or) — §Perf knob for the TC cell.
     """
-    level0 = jnp.full((n_nodes,), UNVISITED, dtype=jnp.int32)
-    level0 = level0.at[root].set(0)
     src_c = jnp.clip(src, 0, n_nodes)  # sentinel slot n_nodes
     dst_c = jnp.clip(dst, 0, n_nodes)
+    # Seed every edge-less vertex up front at level 0.  The reseed rule
+    # below revives dead frontiers ONE vertex per iteration — on RMAT
+    # graphs (hundreds of isolated vertices) that is hundreds of extra
+    # O(m) segment_max sweeps.  A vertex with no incident edges can take
+    # any level without affecting horizontal marking, so bulk-seeding is
+    # exact and leaves the one-at-a-time path only for real components.
+    has_edge = jax.ops.segment_max(
+        jnp.ones_like(dst_c), dst_c, num_segments=n_nodes + 1
+    )[:n_nodes]
+    if axis_name is not None:
+        has_edge = jax.lax.pmax(has_edge, axis_name)
+    level0 = jnp.where(has_edge > 0, UNVISITED, 0).astype(jnp.int32)
+    level0 = level0.at[root].set(0)
 
     def body(state):
         level, cur, _ = state

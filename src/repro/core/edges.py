@@ -24,6 +24,42 @@ def horizontal_mask(
     return valid & (ls == ld) & (ls != UNVISITED)
 
 
+def horizontal_queries(g, level):
+    """Compact + degree-sort the horizontal undirected query edges.
+
+    The counting algorithm only ever intersects horizontal undirected
+    edges (k·m of the ``num_slots`` directed slots), so instead of probing
+    every slot with non-horizontal rows sentinel-masked we stable-argsort
+    the real queries to the front, keyed by small-endpoint degree — one
+    sort buys both the compaction (probe work scales with k·m, not 2m)
+    and the degree-bucket layout (each bucket is then a contiguous row
+    range; see DESIGN.md §2).
+
+    Returns ``(qu, qw, d_small, d_large, n_h)``: int32[num_slots] arrays
+    whose first ``n_h`` rows are the horizontal queries (``qu < qw``)
+    sorted by ``d_small`` ascending; trailing rows are sentinel (``n``)
+    with ``d_small == d_large == 0``.
+    """
+    from repro.graph.csr import undirected_edges
+
+    n = g.n_nodes
+    horiz = horizontal_mask(g.src, g.dst, level, n)
+    eu, ew, und = undirected_edges(g)
+    use = und & horiz
+    deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
+    du = deg_ext[jnp.clip(eu, 0, n)]
+    dw = deg_ext[jnp.clip(ew, 0, n)]
+    big = jnp.int32(g.num_slots + 1)  # > any degree
+    key = jnp.where(use, jnp.minimum(du, dw), big)
+    order = jnp.argsort(key, stable=True)
+    qu = jnp.where(use, eu, n)[order]
+    qw = jnp.where(use, ew, n)[order]
+    d_small = jnp.where(use, jnp.minimum(du, dw), 0)[order]
+    d_large = jnp.where(use, jnp.maximum(du, dw), 0)[order]
+    n_h = jnp.sum(use, dtype=jnp.int32)
+    return qu, qw, d_small, d_large, n_h
+
+
 def classify_edges(src, dst, level, n_nodes):
     """Return int8 class per directed edge: 0 pad/invalid, 1 horizontal,
     2 adjacent-level (tree or strut).  (Tree-vs-strut needs parent pointers,

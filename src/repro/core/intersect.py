@@ -14,11 +14,13 @@ this loop; this module is its ``ref``-equivalent and the small-graph path.
 """
 from __future__ import annotations
 
+import functools
 import math
 
+import jax
 import jax.numpy as jnp
 
-from repro.graph.csr import Graph, bounded_binary_search
+from repro.graph.csr import Graph, bounded_binary_search, gather_neighbors
 
 
 def probe_common_neighbors(
@@ -27,37 +29,169 @@ def probe_common_neighbors(
     ew: jnp.ndarray,
     *,
     d_max: int,
+    d_search: int | None = None,
 ):
     """For query edges ``(eu, ew)`` (sentinel-padded with ``n``), return
     ``(apexes int32[q, d_max], found bool[q, d_max])`` — the candidate
     common neighbors and the intersection membership mask.
+
+    ``d_max`` bounds the *candidate* width (smaller endpoint's list);
+    ``d_search`` bounds the binary-search depth over the *larger*
+    endpoint's list and must be >= its degree.  The bucketed pipeline
+    passes the bucket's max large-endpoint degree; ``None`` falls back to
+    ``d_max`` (the seed convention — only safe when ``d_max`` is the
+    global max degree).
     """
     n = g.n_nodes
-    num_steps = max(1, math.ceil(math.log2(d_max + 1)))
+    num_steps = max(1, math.ceil(math.log2((d_search or d_max) + 1)))
     deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
-    row_ext = g.row_offsets
     eu_c = jnp.clip(eu, 0, n)
     ew_c = jnp.clip(ew, 0, n)
-    du = deg_ext[eu_c]
-    dw = deg_ext[ew_c]
     # probe from the smaller-degree endpoint
-    swap = dw < du
+    swap = deg_ext[ew_c] < deg_ext[eu_c]
     small = jnp.where(swap, ew_c, eu_c)
     large = jnp.where(swap, eu_c, ew_c)
-    d_small = jnp.minimum(du, dw)
-    starts_s = row_ext[small]
-    pos = jnp.arange(d_max, dtype=jnp.int32)
-    idx = starts_s[:, None] + pos[None, :]
-    valid = pos[None, :] < d_small[:, None]
-    idx = jnp.clip(idx, 0, g.num_slots - 1)
-    cand = jnp.where(valid, g.dst[idx], n)
-    starts_l = jnp.broadcast_to(row_ext[large][:, None], cand.shape)
+    cand = gather_neighbors(g, small, width=d_max, pad=n)
+    valid = cand < n  # pad is the sentinel vertex; real neighbors are < n
+    starts_l = jnp.broadcast_to(g.row_offsets[large][:, None], cand.shape)
     len_l = jnp.broadcast_to(deg_ext[large][:, None], cand.shape)
     found = bounded_binary_search(
         g.dst, starts_l, len_l, cand, num_steps=num_steps
     )
     found = found & valid & (eu < n)[:, None] & (ew < n)[:, None]
     return cand, found
+
+
+def resolve_backend(
+    intersect_backend: str = "auto", interpret: bool | None = None
+) -> tuple[str, bool]:
+    """Normalize the ``intersect_backend`` switch shared by the counting
+    entry points.
+
+    ``"auto"`` picks the Pallas kernel on real TPU and the jnp
+    binary-search probe elsewhere (interpret-mode Pallas on CPU is a
+    correctness path, not a fast path).  ``interpret=None`` likewise
+    auto-selects from ``jax.default_backend()``.
+    """
+    backend = intersect_backend
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"intersect_backend must be 'auto', 'jnp' or 'pallas'; "
+            f"got {intersect_backend!r}"
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return backend, bool(interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_cand", "d_targ", "backend", "interpret"),
+)
+def probe_block(
+    g: Graph,
+    qu: jnp.ndarray,
+    qw: jnp.ndarray,
+    *,
+    d_cand: int,
+    d_targ: int | None = None,
+    backend: str = "jnp",
+    interpret: bool = True,
+):
+    """Backend-dispatched probe: ``(apexes int32[q, d_cand], found bool)``.
+
+    Both backends gather candidates from the smaller-degree endpoint in
+    CSR order, so their outputs are bit-identical; ``"jnp"`` tests
+    membership by branch-free binary search in CSR, ``"pallas"`` by the
+    VMEM-tiled all-pairs compare kernel (``intersect_pallas_hits``).
+    ``d_targ`` (pallas only) is the dense width of the larger side.
+    """
+    if backend == "jnp":
+        return probe_common_neighbors(
+            g, qu, qw, d_max=d_cand, d_search=d_targ
+        )
+    from repro.kernels.intersect.intersect import intersect_pallas_hits
+    from repro.kernels.intersect.ops import gather_query_blocks
+
+    n = g.n_nodes
+    level_dummy = jnp.zeros((n,), jnp.int32)  # levels unused for membership
+    cand, targ, _, _ = gather_query_blocks(
+        g, qu, qw, level_dummy, d_cand=d_cand, d_targ=d_targ or d_cand
+    )
+    found = intersect_pallas_hits(cand, targ, interpret=interpret)
+    cand = jnp.where(cand >= 0, cand, n)  # match the jnp probe's sentinel
+    return cand, found
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_cand", "d_targ", "backend", "interpret", "query_chunk"),
+)
+def count_common_neighbors(
+    g: Graph,
+    qu: jnp.ndarray,
+    qw: jnp.ndarray,
+    level: jnp.ndarray,
+    *,
+    d_cand: int,
+    d_targ: int | None = None,
+    backend: str = "jnp",
+    interpret: bool = True,
+    query_chunk: int | None = None,
+):
+    """Summed ``(c1, c2)`` (diff-level / same-level apex hits) over a
+    query block — the per-bucket unit of the compacted pipeline.
+
+    ``query_chunk`` bounds peak memory by probing the rows in
+    ``query_chunk``-sized fori-loop slices (rows must be a multiple);
+    ``None`` probes the whole block at once.
+    """
+    rows = qu.shape[0]
+    chunk = rows if query_chunk is None else min(query_chunk, rows)
+    if rows % chunk:
+        raise ValueError(f"rows={rows} not a multiple of query_chunk={chunk}")
+
+    def one(qu_c, qw_c):
+        if backend == "pallas":
+            from repro.kernels.intersect.intersect import intersect_pallas
+            from repro.kernels.intersect.ops import gather_query_blocks
+
+            cand, targ, lev_c, lev_u = gather_query_blocks(
+                g, qu_c, qw_c, level, d_cand=d_cand, d_targ=d_targ or d_cand
+            )
+            c1, c2 = intersect_pallas(
+                cand, targ, lev_c, lev_u, interpret=interpret
+            )
+            return (
+                jnp.sum(c1, dtype=jnp.int32),
+                jnp.sum(c2, dtype=jnp.int32),
+            )
+        cand, found = probe_common_neighbors(
+            g, qu_c, qw_c, d_max=d_cand, d_search=d_targ
+        )
+        lev_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
+        lev_apex = lev_ext[jnp.clip(cand, 0, g.n_nodes)]
+        lev_u = lev_ext[jnp.clip(qu_c, 0, g.n_nodes)]
+        same = found & (lev_apex == lev_u[:, None])
+        c2 = jnp.sum(same, dtype=jnp.int32)
+        c1 = jnp.sum(found, dtype=jnp.int32) - c2
+        return c1, c2
+
+    if chunk == rows:
+        return one(qu, qw)
+
+    def body(c, carry):
+        c1, c2 = carry
+        sl_u = jax.lax.dynamic_slice(qu, (c * chunk,), (chunk,))
+        sl_w = jax.lax.dynamic_slice(qw, (c * chunk,), (chunk,))
+        d1, d2 = one(sl_u, sl_w)
+        return c1 + d1, c2 + d2
+
+    return jax.lax.fori_loop(
+        0, rows // chunk, body, (jnp.int32(0), jnp.int32(0))
+    )
 
 
 def edge_exists(g: Graph, qu: jnp.ndarray, qv: jnp.ndarray) -> jnp.ndarray:

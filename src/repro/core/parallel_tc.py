@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
 from repro.core.bfs import bfs_levels
 from repro.core.edges import horizontal_mask
 from repro.core.sampling import repartition_by_value
@@ -171,8 +172,8 @@ def _tc_shard(
         return jax.lax.fori_loop(0, qv.shape[0] // chunk, body, (t0, o0))
 
     # fori_loop carries must be device-varying from the start (shard_map vma)
-    t0 = jax.lax.pvary(jnp.int32(0), (axis_name,))
-    o0 = jax.lax.pvary(jnp.bool_(False), (axis_name,))
+    t0 = pvary(jnp.int32(0), (axis_name,))
+    o0 = pvary(jnp.bool_(False), (axis_name,))
     if mode == "allgather":
         # one collective, volume k·m·p — identical to the paper's p rounds
         all_hv = jax.lax.all_gather(hv_p, axis_name).reshape(-1)
@@ -264,7 +265,7 @@ def parallel_triangle_count(
         d_pad=d_pad, mode=mode, hedge_chunk=hedge_chunk,
     )
     s_sh, d_sh, _, _ = shard_edges(g, p, capacity=cap_edges)
-    shard = jax.shard_map(
+    shard = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name)),

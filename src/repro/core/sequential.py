@@ -7,21 +7,44 @@
        c2 += apexes on the same level         (counted thrice, Lemma 2)
     4. T = c1 + c2 / 3                        (Theorem 1)
 
-Everything is static-shape and jit-compatible; `d_max` (the probe padding)
-is the only shape-bearing static argument.
+Two execution strategies (DESIGN.md §2):
+
+* ``triangle_count`` / ``find_triangles`` — the production pipeline.
+  A jitted *plan* pass (BFS + horizontal marking + one stable argsort)
+  compacts the k·m horizontal queries to the front sorted by
+  small-endpoint degree; the host then slices them into 2–3 contiguous
+  degree buckets and probes each bucket at its own padded width through
+  a jitted, backend-dispatched (``jnp`` | ``pallas``) intersection, so
+  probe work scales with k·m × bucket width instead of
+  2m × global-max-degree.  Bucket shapes are rounded up so repeated
+  calls on same-sized graphs hit the jit cache.
+
+* ``triangle_count_dense`` / ``find_triangles_dense`` — the seed
+  single-jit reference: every directed edge slot probed at the global
+  ``d_max``, non-horizontal rows sentinel-masked.  Kept as the golden
+  oracle for equivalence tests and as the ``compact=False`` escape hatch.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bfs import bfs_levels
-from repro.core.edges import horizontal_mask, k_fraction
-from repro.core.intersect import probe_common_neighbors
-from repro.graph.csr import Graph, undirected_edges
+from repro.core.edges import horizontal_mask, horizontal_queries, k_fraction
+from repro.core.intersect import (
+    count_common_neighbors,
+    probe_block,
+    probe_common_neighbors,
+    resolve_backend,
+)
+from repro.graph.csr import Graph, max_degree, undirected_edges
+
+DEFAULT_BUCKET_WIDTHS = (32, 256)
 
 
 @jax.tree_util.register_dataclass
@@ -33,10 +56,179 @@ class TCResult:
     num_horizontal: jnp.ndarray
     k: jnp.ndarray
     levels: jnp.ndarray
+    probe_rows: jnp.ndarray   # query rows actually intersected (padded)
+    probe_cells: jnp.ndarray  # float32 Σ rows × candidate width (a work
+    #   metric — float so Graph500-scale products can't overflow int32)
+    peak_rows: jnp.ndarray    # largest single probed block (peak-memory rows)
+    h_overflow: jnp.ndarray   # True iff cap_h dropped real horizontal queries
+
+
+@functools.partial(jax.jit, static_argnames=("root",))
+def _plan(g: Graph, root: int):
+    """Plan pass: levels + compacted, degree-sorted horizontal queries."""
+    level = bfs_levels(g.src, g.dst, g.n_nodes, root=root)
+    qu, qw, d_small, d_large, n_h = horizontal_queries(g, level)
+    k = k_fraction(g.src, g.dst, level, g.n_nodes)
+    return level, qu, qw, d_small, d_large, n_h, k
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return max(mult, -(-x // mult) * mult)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def _plan_buckets(ds_h, dl_h, bucket_widths, d_cap):
+    """Host-side bucket plan over the compacted query block.
+
+    ``ds_h``/``dl_h`` are the small/large endpoint degrees of the real
+    horizontal queries, ascending in ``ds_h``.  Returns
+    ``[(start, count, d_cand, d_targ)]`` with contiguous
+    ``[start, start + count)`` ranges covering all queries; ``d_cand`` is
+    the bucket's candidate width (clamped to ``d_cap`` if given),
+    ``d_targ`` the widest larger-endpoint list in the bucket (Pallas
+    gather width and binary-search depth).
+    """
+    H = int(ds_h.shape[0])
+    if H == 0:
+        return []
+    # widths are rounded (pow2 top, 128-aligned d_targ) so same-scale
+    # graphs with different degree profiles share jit cache entries —
+    # the static shapes are the rounded values, never raw degrees
+    top = _next_pow2(max(int(ds_h[-1]), 1))
+    if d_cap is not None:
+        top = min(top, int(d_cap))  # lossy cap on candidate width (see
+        # triangle_count's d_max doc; membership tests stay exact)
+    widths = sorted(w for w in {int(w) for w in bucket_widths} if 0 < w < top)
+    widths.append(top)
+    plan, start = [], 0
+    for w in widths:
+        end = int(np.searchsorted(ds_h, w, side="right")) if w < top else H
+        if end <= start:
+            continue
+        d_targ = _ceil_to(int(dl_h[start:end].max()), 128)
+        plan.append((start, end - start, w, d_targ))
+        start = end
+    return plan
+
+
+def _slice_pad(
+    x: jnp.ndarray, start: int, count: int, rows: int, fill: int
+) -> jnp.ndarray:
+    """``rows`` entries starting at ``start``: the ``count`` real ones,
+    then sentinel padding (never rows of the next bucket)."""
+    part = x[start:start + count]
+    if count < rows:
+        part = jnp.concatenate(
+            [part, jnp.full((rows - count,), fill, x.dtype)]
+        )
+    return part
+
+
+def _prepare_pipeline(g, root, cap_h, bucket_widths, d_max, row_mult):
+    """Shared host orchestration for counting and finding: run the plan
+    pass, pull the degree profile to the host, lay out the buckets.
+
+    Returns ``(level, n_h, k, h_overflow, blocks)`` where ``blocks`` is a
+    list of ``(qu_b, qw_b, rows, d_cand, d_targ)`` padded query slices
+    ready to probe."""
+    level, qu, qw, ds, dl, n_h, k = _plan(g, root)
+    H = int(jax.device_get(n_h))
+    h_used = H if cap_h is None else min(int(cap_h), H)
+    ds_h = np.asarray(jax.device_get(ds[:h_used]))
+    dl_h = np.asarray(jax.device_get(dl[:h_used]))
+    blocks = []
+    for start, count, d_cand, d_targ in _plan_buckets(
+        ds_h, dl_h, bucket_widths, d_max
+    ):
+        rows = _ceil_to(count, row_mult)
+        blocks.append((
+            _slice_pad(qu, start, count, rows, g.n_nodes),
+            _slice_pad(qw, start, count, rows, g.n_nodes),
+            rows, d_cand, d_targ,
+        ))
+    return level, n_h, k, h_used < H, blocks
+
+
+def triangle_count(
+    g: Graph,
+    *,
+    d_max: int | None = None,
+    root: int = 0,
+    intersect_backend: str = "auto",
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    cap_h: int | None = None,
+    query_chunk: int | None = None,
+    interpret: bool | None = None,
+    compact: bool = True,
+) -> TCResult:
+    """Cover-edge triangle count via the compacted, degree-bucketed
+    pipeline.
+
+    Args:
+      d_max: candidate-width clamp.  ``None`` (default) sizes every bucket
+        exactly; passing the seed-style global max degree is accepted and
+        changes nothing (small-endpoint degrees never exceed it).  A
+        *smaller* value lossily truncates candidate lists — and is NOT
+        equivalent to ``triangle_count_dense`` with the same ``d_max``,
+        whose membership tests additionally under-search large endpoints
+        (a seed artifact kept for reference fidelity).
+      intersect_backend: ``"auto"`` | ``"jnp"`` | ``"pallas"`` — see
+        ``repro.core.intersect.resolve_backend``.
+      bucket_widths: small-endpoint-degree bucket boundaries; queries with
+        ``d_small <= w`` probe at width ``w``.
+      cap_h: optional cap on the compacted query block (k·m rows when
+        ``None``).  Dropped queries set ``h_overflow``.
+      query_chunk: probe rows in fori-loop chunks of this size to bound
+        peak memory (also the row-padding multiple; default 64).
+      interpret: Pallas interpret override; ``None`` = auto from backend.
+      compact: ``False`` falls back to the dense seed reference
+        (``triangle_count_dense``; jnp only).
+    """
+    backend, interpret = resolve_backend(intersect_backend, interpret)
+    if not compact:
+        dm = d_max if d_max is not None else max(1, max_degree(g))
+        return triangle_count_dense(g, d_max=dm, root=root)
+    row_mult = int(query_chunk) if query_chunk else 64
+    level, n_h, k, h_overflow, blocks = _prepare_pipeline(
+        g, root, cap_h, bucket_widths, d_max, row_mult
+    )
+    c1 = jnp.int32(0)
+    c2 = jnp.int32(0)
+    probe_rows = 0
+    probe_cells = 0
+    peak_rows = 0
+    for qu_b, qw_b, rows, d_cand, d_targ in blocks:
+        b1, b2 = count_common_neighbors(
+            g, qu_b, qw_b, level,
+            d_cand=d_cand, d_targ=d_targ, backend=backend,
+            interpret=interpret, query_chunk=query_chunk,
+        )
+        c1 = c1 + b1
+        c2 = c2 + b2
+        probe_rows += rows
+        probe_cells += rows * d_cand
+        peak_rows = max(peak_rows, min(rows, query_chunk or rows))
+    return TCResult(
+        triangles=c1 + c2 // 3,
+        c1=c1,
+        c2=c2,
+        num_horizontal=n_h,
+        k=k,
+        levels=level,
+        probe_rows=jnp.asarray(probe_rows, jnp.int32),
+        probe_cells=jnp.asarray(float(probe_cells), jnp.float32),
+        peak_rows=jnp.asarray(peak_rows, jnp.int32),
+        h_overflow=jnp.asarray(h_overflow),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("d_max", "root"))
-def triangle_count(g: Graph, *, d_max: int, root: int = 0) -> TCResult:
+def triangle_count_dense(g: Graph, *, d_max: int, root: int = 0) -> TCResult:
+    """Seed reference: probe ALL ``num_slots`` directed edge slots at the
+    global ``d_max`` width, non-horizontal rows sentinel-masked."""
     level = bfs_levels(g.src, g.dst, g.n_nodes, root=root)
     horiz = horizontal_mask(g.src, g.dst, level, g.n_nodes)
     eu, ew, und = undirected_edges(g)
@@ -58,19 +250,128 @@ def triangle_count(g: Graph, *, d_max: int, root: int = 0) -> TCResult:
         num_horizontal=jnp.sum(use, dtype=jnp.int32),
         k=k_fraction(g.src, g.dst, level, g.n_nodes),
         levels=level,
+        probe_rows=jnp.int32(g.num_slots),
+        probe_cells=jnp.float32(float(g.num_slots) * d_max),
+        peak_rows=jnp.int32(g.num_slots),
+        h_overflow=jnp.asarray(False),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("d_max", "max_triangles", "root"))
+def _emit_mask(qu, qw, cand, found, level, n):
+    """Emission mask for triangle finding: apex-on-different-level hits
+    appear once naturally; all-same-level triangles {u, w, v} have three
+    horizontal edges, so keep only the emission where v > max(u, w) AND
+    u < w — exactly the smallest-pair edge, since all three pairs occur."""
+    lev_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
+    lev_apex = lev_ext[jnp.clip(cand, 0, n)]
+    lev_u = lev_ext[jnp.clip(qu, 0, n)]
+    same = found & (lev_apex == lev_u[:, None])
+    diff = found & (lev_apex != lev_u[:, None])
+    keep_same = same & (cand > jnp.maximum(qu, qw)[:, None])
+    return diff | keep_same
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_cand", "d_targ", "backend", "interpret",
+                     "max_triangles"),
+)
+def _find_block(
+    g: Graph,
+    qu: jnp.ndarray,
+    qw: jnp.ndarray,
+    level: jnp.ndarray,
+    *,
+    d_cand: int,
+    d_targ: int,
+    backend: str,
+    interpret: bool,
+    max_triangles: int,
+):
+    """Probe one bucket and compact its emitted triangles by cumsum
+    (prefix-sum scatter — O(q·d) instead of the dense path's full argsort
+    over q·d_max booleans).  Returns ``(tri int32[max_triangles, 3], cnt)``
+    where ``cnt`` is the total emitted (may exceed the buffer)."""
+    cand, found = probe_block(
+        g, qu, qw, d_cand=d_cand, d_targ=d_targ, backend=backend,
+        interpret=interpret,
+    )
+    emit = _emit_mask(qu, qw, cand, found, level, g.n_nodes)
+    flat = emit.reshape(-1)
+    pos = jnp.cumsum(flat, dtype=jnp.int32) - 1
+    write = jnp.where(flat & (pos < max_triangles), pos, max_triangles)
+    tri_flat = jnp.stack(
+        [
+            jnp.broadcast_to(qu[:, None], cand.shape).reshape(-1),
+            jnp.broadcast_to(qw[:, None], cand.shape).reshape(-1),
+            cand.reshape(-1),
+        ],
+        axis=1,
+    )
+    buf = jnp.full((max_triangles + 1, 3), -1, jnp.int32)
+    buf = buf.at[write].set(tri_flat)  # row max_triangles is the spill row
+    cnt = jnp.sum(emit, dtype=jnp.int32)
+    return buf[:max_triangles], cnt
+
+
 def find_triangles(
+    g: Graph,
+    *,
+    max_triangles: int,
+    d_max: int | None = None,
+    root: int = 0,
+    intersect_backend: str = "auto",
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    cap_h: int | None = None,
+    interpret: bool | None = None,
+    compact: bool = True,
+):
+    """Triangle *finding* through the same compacted/bucketed pipeline:
+    returns ``(tri int32[max_triangles, 3], count)``; rows past ``count``
+    (or past the buffer, on overflow) are -1.  Triangles are unique (see
+    ``_emit_mask``); their order depends on the bucket layout.  A
+    ``cap_h`` that drops real horizontal queries truncates the result and
+    raises a ``UserWarning`` (counting surfaces the same condition as
+    ``TCResult.h_overflow``)."""
+    backend, interpret = resolve_backend(intersect_backend, interpret)
+    if not compact:
+        dm = d_max if d_max is not None else max(1, max_degree(g))
+        return find_triangles_dense(
+            g, d_max=dm, max_triangles=max_triangles, root=root
+        )
+    level, _, _, h_overflow, blocks = _prepare_pipeline(
+        g, root, cap_h, bucket_widths, d_max, 64
+    )
+    if h_overflow:
+        warnings.warn(
+            f"find_triangles: cap_h={cap_h} dropped horizontal queries — "
+            "the returned triangle list is incomplete",
+            stacklevel=2,
+        )
+    out = np.full((max_triangles, 3), -1, np.int32)
+    off = 0
+    total = 0
+    for qu_b, qw_b, rows, d_cand, d_targ in blocks:
+        tri_b, cnt_b = _find_block(
+            g, qu_b, qw_b, level,
+            d_cand=d_cand, d_targ=d_targ, backend=backend,
+            interpret=interpret, max_triangles=max_triangles,
+        )
+        c = int(jax.device_get(cnt_b))
+        total += c
+        take = min(c, max_triangles - off)
+        if take > 0:
+            out[off:off + take] = np.asarray(jax.device_get(tri_b))[:take]
+            off += take
+    return jnp.asarray(out), jnp.asarray(total, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("d_max", "max_triangles", "root"))
+def find_triangles_dense(
     g: Graph, *, d_max: int, max_triangles: int, root: int = 0
 ):
-    """Triangle *finding*: returns ``(tri int32[max_triangles, 3], count)``.
-
-    Unique triangles: apex-on-different-level ones appear once naturally;
-    all-same-level ones are emitted only from their minimum-endpoint
-    horizontal edge (dedup of the triple-count).
-    """
+    """Seed reference for triangle finding (dense probe + full argsort
+    compaction); see ``find_triangles``."""
     level = bfs_levels(g.src, g.dst, g.n_nodes, root=root)
     horiz = horizontal_mask(g.src, g.dst, level, g.n_nodes)
     eu, ew, und = undirected_edges(g)
@@ -78,17 +379,7 @@ def find_triangles(
     qu = jnp.where(use, eu, g.n_nodes)
     qw = jnp.where(use, ew, g.n_nodes)
     cand, found = probe_common_neighbors(g, qu, qw, d_max=d_max)
-    lev_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
-    lev_apex = lev_ext[jnp.clip(cand, 0, g.n_nodes)]
-    lev_u = lev_ext[jnp.clip(qu, 0, g.n_nodes)]
-    same = found & (lev_apex == lev_u[:, None])
-    diff = found & (lev_apex != lev_u[:, None])
-    # same-level triangles {u, w, v} have three horizontal edges; keep the
-    # emission where (u, w) is lexicographically smallest, i.e. u < w < v is
-    # NOT enough (v may sit between) — keep v > max(u, w) AND u < w, which
-    # selects exactly the smallest-pair edge since all three pairs occur.
-    keep_same = same & (cand > jnp.maximum(qu, qw)[:, None])
-    emit = diff | keep_same
+    emit = _emit_mask(qu, qw, cand, found, level, g.n_nodes)
     u_mat = jnp.broadcast_to(qu[:, None], cand.shape)
     w_mat = jnp.broadcast_to(qw[:, None], cand.shape)
     flat_emit = emit.reshape(-1)

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 
 def _clean_axis(ax, names):
     if ax is None:
@@ -23,7 +25,7 @@ def _clean_axis(ax, names):
 
 
 def maybe_constrain(x, *spec_axes):
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     names = getattr(mesh, "axis_names", ())
     if not names:
         return x

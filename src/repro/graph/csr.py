@@ -120,6 +120,28 @@ def undirected_edges(g: Graph) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     return u, w, keep
 
 
+def gather_neighbors(
+    g: Graph, v: jnp.ndarray, *, width: int, pad: int
+) -> jnp.ndarray:
+    """Dense ``int32[len(v), width]`` adjacency rows for vertices ``v``.
+
+    Rows of sentinel vertices (``v == n``) and slots past each vertex's
+    degree are filled with ``pad``.  Shared by the Pallas intersect
+    front-end (ops.py) and the bucketed probe pipeline (core/intersect.py)
+    so every consumer gathers candidate lists the same way — neighbor
+    order is CSR order, i.e. sorted ascending.
+    """
+    n = g.n_nodes
+    deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
+    vc = jnp.clip(v, 0, n)
+    starts = g.row_offsets[vc]
+    dv = deg_ext[vc]
+    pos = jnp.arange(width, dtype=jnp.int32)
+    idx = jnp.clip(starts[:, None] + pos[None, :], 0, g.num_slots - 1)
+    ok = (pos[None, :] < dv[:, None]) & (v < n)[:, None]
+    return jnp.where(ok, g.dst[idx], pad)
+
+
 def bounded_binary_search(
     sorted_arr: jnp.ndarray,
     starts: jnp.ndarray,

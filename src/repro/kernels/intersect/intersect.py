@@ -10,13 +10,19 @@ early-out (`pl.when`) — whole tile pairs whose value ranges don't overlap
 are skipped, recovering most of merge-path's advantage without its serial
 two-pointer dependency.
 
-Work per query is O(D^2 / V) vector slots vs the paper's O(D) serial hash
-probes; for V = 8*128 VPU lanes and the D <= few-hundred sublists produced
-by the sample-sort transpose, the crossover strongly favors the vector
+Work per query is O(Dc·Dt / V) vector slots vs the paper's O(D) serial
+hash probes; for V = 8*128 VPU lanes and the D <= few-hundred sublists
+produced by degree bucketing, the crossover strongly favors the vector
 form — and it needs no hash-table build, no scatter, no data-dependent
 control flow.
 
-Grid: (Q/BQ, D/BD, D/BD); the two counter outputs are revisited across the
+The candidate and target widths are independent (``cand: (Q, Dc)``,
+``targ: (Q, Dt)``): the bucketed pipeline gathers candidates from the
+*smaller*-degree endpoint at the bucket width and targets from the larger
+endpoint at its own (possibly hub-sized) width, so low-degree buckets
+never pay hub padding on the candidate side.
+
+Grid: (Q/BQ, Dc/BD, Dt/BD); the counter outputs are revisited across the
 inner two grid dims and accumulated in place (sequential TPU grid).
 """
 from __future__ import annotations
@@ -29,6 +35,16 @@ from jax.experimental import pallas as pl
 
 CAND_PAD = -1
 TARG_PAD = -2
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: compiled on real TPU, interpreter
+    everywhere else (CPU containers, GPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret):
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def _kernel(cand_ref, targ_ref, lev_c_ref, lev_u_ref, c1_ref, c2_ref):
@@ -68,17 +84,21 @@ def intersect_pallas(
     *,
     block_q: int = 32,
     block_d: int = 128,
-    interpret: bool = True,  # CPU container default; pass False on real TPU
+    interpret: bool | None = None,  # None -> auto from jax.default_backend()
 ):
-    """See ref.intersect_ref. Shapes are padded up to block multiples here."""
-    q, d = cand.shape
+    """See ref.intersect_ref. Shapes are padded up to block multiples here;
+    ``cand`` and ``targ`` may have different widths."""
+    interpret = _resolve_interpret(interpret)
+    q, dc = cand.shape
+    dt = targ.shape[1]
     qp = -(-q // block_q) * block_q
-    dp = -(-d // block_d) * block_d
-    cand = jnp.pad(cand, ((0, qp - q), (0, dp - d)), constant_values=CAND_PAD)
-    targ = jnp.pad(targ, ((0, qp - q), (0, dp - d)), constant_values=TARG_PAD)
-    lev_c = jnp.pad(lev_c, ((0, qp - q), (0, dp - d)), constant_values=-7)
+    dcp = -(-dc // block_d) * block_d
+    dtp = -(-dt // block_d) * block_d
+    cand = jnp.pad(cand, ((0, qp - q), (0, dcp - dc)), constant_values=CAND_PAD)
+    targ = jnp.pad(targ, ((0, qp - q), (0, dtp - dt)), constant_values=TARG_PAD)
+    lev_c = jnp.pad(lev_c, ((0, qp - q), (0, dcp - dc)), constant_values=-7)
     lev_u = jnp.pad(lev_u, (0, qp - q), constant_values=-9)
-    grid = (qp // block_q, dp // block_d, dp // block_d)
+    grid = (qp // block_q, dcp // block_d, dtp // block_d)
     c1, c2 = pl.pallas_call(
         _kernel,
         grid=grid,
@@ -99,3 +119,61 @@ def intersect_pallas(
         interpret=interpret,
     )(cand, targ, lev_c, lev_u)
     return c1[:q], c2[:q]
+
+
+def _hits_kernel(cand_ref, targ_ref, hit_ref):
+    i2 = pl.program_id(2)
+
+    @pl.when(i2 == 0)
+    def _init():
+        hit_ref[...] = jnp.zeros_like(hit_ref)
+
+    cand = cand_ref[...]
+    targ = targ_ref[...]
+    c_lo, c_hi = jnp.min(cand), jnp.max(cand)
+    t_lo, t_hi = jnp.min(targ), jnp.max(targ)
+    overlap = (c_hi >= 0) & (t_hi >= 0) & (c_lo <= t_hi) & (t_lo <= c_hi)
+
+    @pl.when(overlap)
+    def _work():
+        eq = cand[:, :, None] == targ[:, None, :]
+        hit = jnp.any(eq, axis=2) & (cand >= 0)
+        hit_ref[...] |= hit.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_d", "interpret")
+)
+def intersect_pallas_hits(
+    cand: jnp.ndarray,
+    targ: jnp.ndarray,
+    *,
+    block_q: int = 32,
+    block_d: int = 128,
+    interpret: bool | None = None,
+):
+    """Membership variant for triangle *finding*: ``bool[Q, Dc]`` marking
+    which candidates appear in the target row.  Same tiling/early-out as
+    ``intersect_pallas``; the (BQ, BDc) hit tile is revisited across the
+    target grid dim and OR-accumulated in place."""
+    interpret = _resolve_interpret(interpret)
+    q, dc = cand.shape
+    dt = targ.shape[1]
+    qp = -(-q // block_q) * block_q
+    dcp = -(-dc // block_d) * block_d
+    dtp = -(-dt // block_d) * block_d
+    cand = jnp.pad(cand, ((0, qp - q), (0, dcp - dc)), constant_values=CAND_PAD)
+    targ = jnp.pad(targ, ((0, qp - q), (0, dtp - dt)), constant_values=TARG_PAD)
+    grid = (qp // block_q, dcp // block_d, dtp // block_d)
+    hit = pl.pallas_call(
+        _hits_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i1)),
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i2)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i1)),
+        out_shape=jax.ShapeDtypeStruct((qp, dcp), jnp.int32),
+        interpret=interpret,
+    )(cand, targ)
+    return hit[:q, :dc] > 0

@@ -4,6 +4,13 @@ Does the irregular work where the TPU wants it (XLA gathers), then calls
 the Pallas tile kernel.  ``use_pallas=False`` falls back to the pure-jnp
 oracle — both paths share the same gather front-end, so kernel-vs-ref
 tests exercise exactly the kernel math.
+
+Candidates are gathered from the *smaller*-degree endpoint (DESIGN.md §2:
+intersection is symmetric, so probing from the smaller side bounds the
+candidate width by min-degree, not max).  For horizontal edges the swap
+never changes the level split — both endpoints sit on the same BFS level.
+``d_targ`` lets the larger side pad to its own (possibly hub-sized) width
+independently of the candidate width.
 """
 from __future__ import annotations
 
@@ -12,24 +19,47 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.graph.csr import Graph
-from repro.kernels.intersect.intersect import CAND_PAD, TARG_PAD, intersect_pallas
+from repro.graph.csr import Graph, gather_neighbors
+from repro.kernels.intersect.intersect import (
+    CAND_PAD,
+    TARG_PAD,
+    intersect_pallas,
+)
 from repro.kernels.intersect.ref import intersect_ref
 
 
-def _gather_padded(g: Graph, v: jnp.ndarray, d_max: int, pad: int):
+def gather_query_blocks(
+    g: Graph,
+    qu: jnp.ndarray,
+    qw: jnp.ndarray,
+    level: jnp.ndarray,
+    *,
+    d_cand: int,
+    d_targ: int,
+):
+    """Kernel front-end: dense ``(cand, targ, lev_c, lev_u)`` blocks for
+    query edges ``(qu, qw)`` (sentinel-padded with ``n``), candidates from
+    the smaller-degree endpoint."""
     n = g.n_nodes
     deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
-    starts = g.row_offsets[jnp.clip(v, 0, n)]
-    dv = deg_ext[jnp.clip(v, 0, n)]
-    pos = jnp.arange(d_max, dtype=jnp.int32)
-    idx = jnp.clip(starts[:, None] + pos[None, :], 0, g.num_slots - 1)
-    ok = (pos[None, :] < dv[:, None]) & (v < n)[:, None]
-    return jnp.where(ok, g.dst[idx], pad)
+    qu_c = jnp.clip(qu, 0, n)
+    qw_c = jnp.clip(qw, 0, n)
+    swap = deg_ext[qw_c] < deg_ext[qu_c]
+    small = jnp.where(swap, qw_c, qu_c)
+    large = jnp.where(swap, qu_c, qw_c)
+    small = jnp.where(qu < n, small, n)  # keep sentinel rows sentinel
+    large = jnp.where(qw < n, large, n)
+    cand = gather_neighbors(g, small, width=d_cand, pad=CAND_PAD)
+    targ = gather_neighbors(g, large, width=d_targ, pad=TARG_PAD)
+    lev_ext = jnp.concatenate([level, jnp.full((1,), -7, jnp.int32)])
+    lev_c = lev_ext[jnp.clip(cand, 0, n)]
+    lev_c = jnp.where(cand >= 0, lev_c, -7)
+    lev_u = jnp.where(qu < n, lev_ext[qu_c], -9)
+    return cand, targ, lev_c, lev_u
 
 
 @functools.partial(
-    jax.jit, static_argnames=("d_max", "use_pallas", "interpret")
+    jax.jit, static_argnames=("d_max", "d_targ", "use_pallas", "interpret")
 )
 def horizontal_edge_counts(
     g: Graph,
@@ -38,21 +68,18 @@ def horizontal_edge_counts(
     level: jnp.ndarray,
     *,
     d_max: int,
+    d_targ: int | None = None,
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Per horizontal edge (qu, qw): (#diff-level apexes, #same-level apexes).
 
-    ``interpret`` defaults True because this container is CPU; on real TPU
-    pass False.
+    ``interpret=None`` auto-selects from ``jax.default_backend()``:
+    compiled on real TPU, interpreter elsewhere.
     """
-    n = g.n_nodes
-    cand = _gather_padded(g, qu, d_max, CAND_PAD)
-    targ = _gather_padded(g, qw, d_max, TARG_PAD)
-    lev_ext = jnp.concatenate([level, jnp.full((1,), -7, jnp.int32)])
-    lev_c = lev_ext[jnp.clip(cand, 0, n)]
-    lev_c = jnp.where(cand >= 0, lev_c, -7)
-    lev_u = jnp.where(qu < n, lev_ext[jnp.clip(qu, 0, n)], -9)
+    cand, targ, lev_c, lev_u = gather_query_blocks(
+        g, qu, qw, level, d_cand=d_max, d_targ=d_targ or d_max
+    )
     if use_pallas:
         return intersect_pallas(cand, targ, lev_c, lev_u, interpret=interpret)
     return intersect_ref(cand, targ, lev_c, lev_u)

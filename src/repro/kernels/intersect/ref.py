@@ -3,10 +3,13 @@
 Inputs are the *pre-gathered dense* query blocks (the irregular CSR->dense
 gather happens once in ops.py via XLA, which is where TPUs want gathers):
 
-  cand   int32[Q, D]   sorted candidate neighbor lists (pad = -1)
-  targ   int32[Q, D]   sorted target neighbor lists   (pad = -2)
-  lev_c  int32[Q, D]   BFS level of each candidate
+  cand   int32[Q, Dc]  sorted candidate neighbor lists (pad = -1)
+  targ   int32[Q, Dt]  sorted target neighbor lists   (pad = -2)
+  lev_c  int32[Q, Dc]  BFS level of each candidate
   lev_u  int32[Q]      BFS level of the horizontal edge's endpoints
+
+``Dc`` and ``Dt`` may differ (bucketed pipeline: candidates from the
+smaller endpoint at bucket width, targets at their own width).
 
 Outputs per query: c1 (apex on a different level), c2 (apex on the same
 level) — the two counters of Theorem 1.

@@ -27,6 +27,8 @@ from pathlib import Path  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.compat import cost_analysis, set_mesh  # noqa: E402
+
 RESULTS = Path(__file__).resolve().parents[3] / "results"
 
 from repro.launch.hlo_analysis import collective_bytes  # noqa: E402
@@ -41,7 +43,7 @@ def run_cell(arch: str, shape: str, mesh, *, smoke: bool = False,
     if cell.skipped:
         return {"arch": arch, "shape": shape, "status": "skipped",
                 "reason": cell.skip_reason, "model_flops": 0.0}
-    with jax.set_mesh(cell.mesh if cell.mesh is not None else mesh):
+    with set_mesh(cell.mesh if cell.mesh is not None else mesh):
         jitted = jax.jit(
             cell.fn, in_shardings=cell.in_shardings,
             out_shardings=cell.out_shardings,
@@ -51,7 +53,7 @@ def run_cell(arch: str, shape: str, mesh, *, smoke: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     rec = {
         "arch": arch,

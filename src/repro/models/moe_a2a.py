@@ -27,7 +27,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import get_abstract_mesh, shard_map
 
 from repro.models.layers import glu_mlp
 
@@ -46,7 +49,7 @@ def a2a_applicable(cfg, x, mesh) -> bool:
 
 def moe_ffn_a2a(params, cfg, x):
     """x [B, S, D] (sharded (pod,data) on B) -> (out, aux)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     model_ax = "model"
     data_axes = _axes(mesh, ("pod", "data"))
     n_model = mesh.shape[model_ax]
@@ -130,7 +133,7 @@ def moe_ffn_a2a(params, cfg, x):
     shared_spec = (
         jax.tree.map(lambda _: P(), shared) if shared is not None else None
     )
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), experts_spec, shared_spec,

@@ -4,7 +4,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref

@@ -5,7 +5,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.bfs import bfs_levels
 from repro.core.edges import horizontal_mask

@@ -4,7 +4,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.kernels.segsum.ops import build_layout, segment_sum
 from repro.kernels.segsum.ref import segment_sum_ref

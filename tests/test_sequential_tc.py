@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.core.bfs import UNVISITED, bfs_levels
 from repro.core.edges import horizontal_mask
@@ -13,7 +12,9 @@ from repro.core.wedge_baseline import wedge_count, wedge_triangle_count
 from repro.graph import generators as gen
 from repro.graph.csr import from_edges, max_degree
 
-from conftest import nx_triangles
+from conftest import nx_triangles, optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 
 def test_matches_networkx(named_graph):
