@@ -2,10 +2,15 @@
 vs wedge-query baselines for the paper's 12 SNAP graphs + RMAT 36/42.
 
 All values computed from the paper's own published (n, m, wedges, k, p)
-columns through our implementation of §V-A's closed-form model; the RMAT
-rows reproduce the paper's headline numbers EXACTLY (408TB / 21.04x and
-57.1PB / 176.47x).  SNAP rows deviate <= ~5% because the paper's
-per-graph ceil(log D) is unpublished (we use the Graph500 estimate 4).
+columns through our implementation of §V-A's closed-form model
+(``repro.core.comm_model`` — the *paper-bits* view; the wire-bytes view
+our collectives actually move is ``comm_model.wire_bytes_report`` and is
+deliberately not used here).  The RMAT rows reproduce the paper's
+headline numbers EXACTLY — scale-36 (p=128): 408TB / 21.04x, scale-42
+(p=256): 57.1PB / 176.47x — and ``bench_table1`` asserts the worst-case
+speedup deviation across all rows.  SNAP rows deviate <= ~5% because the
+paper's per-graph ceil(log D) is unpublished (we use the Graph500
+estimate 4, Beamer et al.'s ~7 BFS levels).
 """
 from __future__ import annotations
 
@@ -13,6 +18,9 @@ from repro.core import comm_model as cm
 
 
 def rows():
+    """One dict per Table I row: our modelled volumes/speedup next to the
+    paper's printed strings, plus ``speedup_ratio`` (ours/paper — 1.0 is
+    an exact reproduction) for regression tracking."""
     out = []
     for name, (n, m, tri, wedges, k, p, prev_s, new_s, spd) in cm.TABLE_I.items():
         ours_new = cm.cover_edge_comm(n, m, k, p).total_bytes

@@ -9,8 +9,10 @@ no argument runs everything.
   tc       -> §III/IV: compacted cover-edge pipeline vs the dense seed
               path vs wedge-iterator; also writes ``results/BENCH_tc.json``
               so the perf trajectory is tracked across PRs
-  parallel -> measured wire bytes of Alg. 2's collectives vs the wedge
-              baseline's (p = 8 simulated on one host, subprocess)
+  parallel -> Alg. 2 end-to-end on p = 8 simulated devices (subprocess):
+              allgather vs ring wall time, per-round estimate, planned
+              bucket occupancy, wedge-baseline agreement; writes
+              ``results/BENCH_parallel.json``
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -73,29 +75,25 @@ def bench_tc(scales=(10, 11, 12)):
 
 
 def bench_parallel():
+    """Algorithm 2 on p = 8 simulated devices (subprocess, the device-count
+    flag must precede the first jax import): wall time of both exchange
+    modes, per-round estimate, planned-bucket occupancy of the horizontal
+    rounds, and the wedge-baseline comparison.  Writes
+    ``results/BENCH_parallel.json`` so the distributed perf trajectory is
+    tracked across PRs alongside ``BENCH_tc.json``."""
+    json_out = os.path.normpath(
+        os.path.join(_ROOT, "results", "BENCH_parallel.json")
+    )
     body = (
-        "import jax, numpy as np, time\n"
-        "from jax.sharding import Mesh\n"
-        "from repro.graph import generators as gen\n"
-        "from repro.graph.csr import from_edges\n"
-        "from repro.core.parallel_tc import parallel_triangle_count\n"
-        "from repro.core.wedge_baseline import parallel_wedge_triangle_count\n"
-        "mesh = Mesh(np.array(jax.devices()).reshape(8), ('p',))\n"
-        "edges, n = gen.rmat(10, 16, seed=0)\n"
-        "g = from_edges(edges, n)\n"
-        "res = parallel_triangle_count(g, mesh)\n"
-        "t0=time.time(); res = parallel_triangle_count(g, mesh);"
-        " jax.block_until_ready(res.triangles); dt=time.time()-t0\n"
-        "w = parallel_wedge_triangle_count(g, mesh)\n"
-        "print(f'parallel_tc_p8,{dt*1e6:.0f},T={int(res.triangles)}"
-        "|k={float(res.k):.3f}')\n"
-        "print(f'parallel_wedge_p8,0,wedges_routed={int(w.wedges_routed)}"
-        "|agree={int(w.triangles)==int(res.triangles)}')\n"
+        "from benchmarks.tc_bench import measure_parallel\n"
+        f"measure_parallel(scale=10, p=8, out={json_out!r})\n"
     )
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    src = os.path.join(_ROOT, "src")
+    env["PYTHONPATH"] = (
+        src + os.pathsep + _ROOT + os.pathsep + env.get("PYTHONPATH", "")
+    )
     out = subprocess.run([sys.executable, "-c", body], env=env,
                          capture_output=True, text=True, timeout=900)
     if out.returncode:
@@ -103,6 +101,7 @@ def bench_parallel():
         print(f"parallel_tc_p8,0,ERROR:{err}")
     else:
         print(out.stdout.strip())
+        print(f"parallel_json,0,written={json_out}")
 
 
 def bench_roofline():

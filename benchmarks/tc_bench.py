@@ -66,6 +66,112 @@ def measure(scale: int = 11, seed: int = 0, *, backend: str = "auto",
     }
 
 
+def measure_parallel(scale: int = 10, p: int = 8, seed: int = 0, *,
+                     hedge_chunk: int = 1024, out: str | None = None):
+    """Algorithm 2 through the shared intersection engine on ``p``
+    simulated host devices (the caller must have forced
+    ``--xla_force_host_platform_device_count`` before importing jax).
+
+    Measures wall time of both exchange modes (``ring`` per-round time is
+    total/p — the rounds are fori_loop iterations inside one jit, so a
+    finer split is not observable from the host), checks exactness
+    against Algorithm 1, and reports the planned-bucket layout with its
+    *measured* occupancy: #queries whose min-endpoint degree falls in the
+    bucket's width range vs its statically allocated rows.  Occupancy > 1
+    means that range spilled into a *wider* bucket (the histogram bound
+    allocates widest-first, so spill is always upward — safe, just
+    padded); occupancy << 1 in the widest bucket is the hub headroom the
+    static bound reserved.  Writes
+    the row to ``out`` (JSON) when given and prints the usual CSV lines.
+    """
+    import numpy as np
+
+    from repro.core.bfs import bfs_levels
+    from repro.core.edges import horizontal_queries
+    from repro.core.parallel_tc import (
+        parallel_triangle_count, plan_hedge_rounds,
+    )
+    from repro.core.sequential import triangle_count
+    from repro.core.wedge_baseline import parallel_wedge_triangle_count
+    from jax.sharding import Mesh
+
+    assert len(jax.devices()) >= p, "force host platform device count first"
+    mesh = Mesh(np.array(jax.devices()[:p]).reshape(p), ("p",))
+    edges, n = gen.rmat(scale, 16, seed=seed)
+    g = from_edges(edges, n)
+    m = int(g.n_edges_dir) // 2
+
+    times, res = {}, None
+    for mode in ("allgather", "ring"):
+        times[mode], res = _time(
+            lambda mode=mode: parallel_triangle_count(
+                g, mesh, mode=mode, hedge_chunk=hedge_chunk
+            ),
+            n=2,
+        )
+    seq = triangle_count(g)
+    wres = parallel_wedge_triangle_count(g, mesh)
+
+    # measured bucket occupancy: the horizontal queries every device
+    # gathers, histogrammed against the plan's static row allocation
+    plan = plan_hedge_rounds(g, p, mode="allgather", hedge_chunk=hedge_chunk)
+    level = bfs_levels(g.src, g.dst, n, root=0)
+    _, _, ds, _, n_h = horizontal_queries(g, level)
+    mind = np.asarray(jax.device_get(ds[: int(n_h)]))
+    buckets = []
+    spans = sorted(plan.buckets, key=lambda b: -b.d_cand)  # widest first
+    for b in spans:
+        lower = max(
+            (o.d_cand for o in spans if o.d_cand < b.d_cand), default=0
+        )
+        # widest bucket also absorbs anything above its width (flagged as
+        # overflow at run time if that ever happens)
+        top = b.d_cand if b is not spans[0] else mind.max(initial=0) + 1
+        needed = int(((mind > lower) & (mind <= top)).sum())
+        buckets.append({
+            "width": b.d_cand, "rows": b.rows, "d_targ": b.d_targ,
+            "needed": needed, "occupancy": needed / b.rows,
+        })
+    row = {
+        "scale": scale, "p": p, "n": n, "m": m,
+        "mode_default": "allgather",
+        "k": float(res.k),
+        "triangles": int(res.triangles),
+        "seq_triangles": int(seq.triangles),
+        "agree": int(res.triangles) == int(seq.triangles),
+        "wedge_agree": int(wres.triangles) == int(res.triangles),
+        "allgather_s": times["allgather"],
+        "ring_s": times["ring"],
+        "ring_round_s": times["ring"] / p,
+        "hedge_chunk": hedge_chunk,
+        "buckets": buckets,
+        "planned_cells": plan.probe_cells,
+        "dense_cells": float(plan.total_rows) * max_degree(g),
+        "hedge_overflow": bool(res.hedge_overflow),
+        "transpose_overflow": bool(res.transpose_overflow),
+    }
+    if out:
+        import json
+        import os
+
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump([row], f, indent=2)
+    print(f"parallel_tc_p{p}_allgather,{times['allgather']*1e6:.0f},"
+          f"T={int(res.triangles)}|k={float(res.k):.3f}"
+          f"|agree={row['agree']}")
+    print(f"parallel_tc_p{p}_ring,{times['ring']*1e6:.0f},"
+          f"round_us={times['ring']/p*1e6:.0f}")
+    occ = "|".join(
+        f"w{b['width']}:rows={b['rows']}:occ={b['occupancy']:.2f}"
+        for b in buckets
+    )
+    print(f"parallel_tc_p{p}_buckets,0,{occ}")
+    print(f"parallel_wedge_p{p},0,wedges_routed={int(wres.wedges_routed)}"
+          f"|agree={row['wedge_agree']}")
+    return row
+
+
 def main():
     print("scale,m,k,triangles,cover_s,dense_s,wedge_s,probe_rows,"
           "dense_rows,speedup")

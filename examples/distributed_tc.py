@@ -1,6 +1,12 @@
 """Distributed cover-edge triangle counting (the paper's Algorithm 2) on
 8 simulated devices, vs the wedge-query baseline it replaces.
 
+Algorithm 2's per-device probing runs through the shared intersection
+engine: ``plan_hedge_rounds`` lays out static degree buckets on the host
+(from the graph's degree histogram, valid for any BFS) and every round
+executes that plan against the transposed pair lists — the same
+plan/run split ``triangle_count`` uses (DESIGN.md §3).
+
     PYTHONPATH=src python examples/distributed_tc.py
 """
 import os
@@ -12,7 +18,9 @@ import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 from repro.core import comm_model as cm  # noqa: E402
-from repro.core.parallel_tc import parallel_triangle_count  # noqa: E402
+from repro.core.parallel_tc import (  # noqa: E402
+    parallel_triangle_count, plan_hedge_rounds,
+)
 from repro.core.wedge_baseline import (  # noqa: E402
     parallel_wedge_triangle_count, wedge_count,
 )
@@ -27,11 +35,25 @@ def main():
     g = from_edges(edges, n)
     m = int(g.n_edges_dir) // 2
 
-    res = parallel_triangle_count(g, mesh, mode="ring")
-    wres = parallel_wedge_triangle_count(g, mesh)
+    # hedge_chunk is both the fori-loop probe slice and the bucket-row
+    # granularity — without it the whole per-round buffer is one bucket
+    chunk = 512
+    plan = plan_hedge_rounds(g, p, mode="ring", hedge_chunk=chunk)
     print(f"RMAT scale 11: n={n} m={m}")
+    print("planned horizontal rounds (one engine bucket per line):")
+    for b in plan.buckets:
+        print(f"  rows={b.rows:>6}  candidate width={b.d_cand:>4}  "
+              f"target width={b.d_targ}")
+
+    res = parallel_triangle_count(g, mesh, mode="ring", hedge_chunk=chunk,
+                                  intersect_backend="auto")
+    wres = parallel_wedge_triangle_count(g, mesh)
     print(f"cover-edge (ring): T={int(res.triangles)}  k={float(res.k):.3f}"
           f"  per-device={np.asarray(res.per_device).tolist()}")
+    print(f"  measured horizontal fraction k = {float(res.k):.3f} "
+          f"({int(res.num_horizontal)} of {m} undirected edges)")
+    print(f"  overflow flags: transpose={bool(res.transpose_overflow)} "
+          f"hedge={bool(res.hedge_overflow)} (static capacities held)")
     print(f"wedge baseline:    T={int(wres.triangles)}  "
           f"wedges routed={int(wres.wedges_routed)}")
 

@@ -89,7 +89,7 @@ LM_SHAPES = {
     "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
 }
 
-# pure full-attention archs skip long_500k (DESIGN.md §5) — a 512k dense
+# pure full-attention archs skip long_500k — a 512k dense
 # cache decode is the quadratic regime the pool excludes them from;
 # gemma3's 5:1 sliding-window hybrids run it.
 LONG_CONTEXT_OK = {"gemma3-4b", "gemma3-1b"}

@@ -124,7 +124,7 @@ def _lm_cell(arch: str, cfg, shape_name: str, mesh: Mesh,
     if shape_name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
         return Cell(arch, shape_name, kind, None, (), None, None, 0.0,
                     skip_reason="pure full-attention arch; 512k dense-cache "
-                    "decode excluded (DESIGN.md §5)")
+                    "decode excluded")
     d_axes = sh.data_axes(mesh)
     params = _eval_params(arch, cfg)
     pspecs = sh.lm_param_specs(params, mesh)

@@ -1,15 +1,27 @@
 """Closed-form communication accounting (paper §V-A/§V-B, Table I).
 
-Two views are kept:
+Two deliberately separate views are kept — they answer different
+questions and must not be conflated:
 
-  * paper-bits  — the paper's bit-packed accounting (⌈log D⌉ bits per
-    level, ⌈log n⌉ per vertex id), used to reproduce Table I exactly;
-  * wire-bytes  — what our TPU collectives actually move (int32 words,
-    static capacities), derived from the shapes `parallel_tc` exchanges.
+  * **paper-bits** (``cover_edge_comm`` / ``wedge_comm_bits``) — the
+    paper's information-theoretic accounting: every exchanged quantity is
+    charged its minimal packed width, ⌈log₂ D⌉ bits per BFS level and
+    ⌈log₂ n⌉ bits per vertex id.  This is the currency of the paper's
+    Table I and of the 21×/176× headline reductions, and reproducing
+    those numbers *exactly* is this module's contract.
+
+  * **wire-bytes** (``wire_bytes_report``) — what our TPU collectives
+    actually move: whole int32 words (x32 JAX, no bit packing) at the
+    *static* capacities ``parallel_tc`` allocates (padded chunks, not
+    exact counts).  This is the currency of roofline/deployment math.
+    It is strictly larger than paper-bits — by the 32/⌈log n⌉ packing
+    ratio and the capacity slack — but scales identically, which is the
+    point: the algorithmic win survives the hardware spelling.
 
 Verified against the paper: scale-36 (p=128) -> 408 TB, 21.04x; scale-42
-(p=256) -> 57.1 PB, 176.5x; PB/EB are binary (2^50/2^60) per the paper's
-footnote.
+(p=256) -> 57.1 PB, 176.5x (see ``TABLE_I`` and
+``benchmarks/comm_table.py``); PB/EB are binary (2^50/2^60) per the
+paper's footnote.
 """
 from __future__ import annotations
 
@@ -23,11 +35,16 @@ def _clog2(x: float) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class CommBreakdown:
-    bfs_bits: float
-    splitter_bits: float
-    transpose_bits: float
-    hedge_bits: float
-    reduce_bits: float
+    """Per-phase bit volumes of Algorithm 2 (paper §V-A), one field per
+    algorithm phase in execution order — see ``cover_edge_comm`` for the
+    closed forms and ``parallel_tc._tc_shard`` for the collective each
+    phase maps onto."""
+
+    bfs_bits: float        # line 2: level exchanges of the parallel BFS
+    splitter_bits: float   # lines 6-20: regular-sampling splitter gossip
+    transpose_bits: float  # lines 21-28: the (2-k)m N-hat all-to-all
+    hedge_bits: float      # lines 29-43: k·m horizontal edges × p rounds
+    reduce_bits: float     # line 44: the final count reduction
 
     @property
     def total_bits(self) -> float:
@@ -47,7 +64,32 @@ class CommBreakdown:
 def cover_edge_comm(
     n: float, m: float, k: float, p: int, *, log_d: int | None = None
 ) -> CommBreakdown:
-    """Paper §V-A: total volume of Alg. 2 in bits."""
+    """Paper §V-A: total volume of Alg. 2 in bits, phase by phase.
+
+    The closed forms, in the paper's own terms (log n = ⌈log₂ n⌉ bits per
+    vertex id, log D per BFS level, m undirected edges, k the horizontal
+    fraction):
+
+    * BFS: each directed edge is touched once over the whole traversal
+      and ships a (level, vertex, vertex, vertex) tuple — 2m(log D +
+      3 log n).
+    * splitters: regular sampling gossips p samples per device plus the
+      broadcast back — (2p² − p) log n.
+    * transpose: the modified neighborhoods N-hat hold (2−k)m directed
+      entries (lines 3–5 dropped k·m of the 2m), each shipped once in
+      the value-partitioned all-to-all — (2−k)·m·log n.
+    * horizontal rounds: all k·m horizontal edges visit all p devices
+      (pairwise swap or all-gather, same volume) — k·m·p·log n.  For
+      k ≈ 0.65 and large p this term dominates, which is why the paper's
+      reduction is ≈ wedges/(k·m·p) versus the wedge baseline.
+    * reduction: one partial count per device — (p−1) log n.
+
+    ``log_d=None`` uses the paper's Graph500 estimate ⌈log₂ D⌉ = 4
+    (Beamer et al.: RMAT diameter ≈ 7 levels); per-graph values for the
+    SNAP rows are unpublished, which is why those rows deviate ≤ ~5%
+    while the RMAT-36/42 rows reproduce exactly (Table I's 408 TB /
+    21.04× and 57.1 PB / 176.47×).
+    """
     log_n = _clog2(n)
     if log_d is None:
         log_d = 4  # paper's Graph500 estimate (Beamer et al.: ~7 levels)
@@ -62,7 +104,10 @@ def cover_edge_comm(
 
 def wedge_comm_bits(wedges: float, n: float, *, bits_per_vertex: int | None = None
                     ) -> float:
-    """Prior wedge-query algorithms: one (v1, v2) query per wedge."""
+    """Prior wedge-query algorithms (Table I's "previous" column): one
+    (v1, v2) closing-edge query per wedge, 2⌈log₂ n⌉ bits each.  Wedge
+    counts grow like Σ d(v)² — far faster than the k·m·p horizontal
+    volume above on skewed graphs, which is the whole comparison."""
     b = bits_per_vertex if bits_per_vertex is not None else _clog2(n)
     return wedges * 2 * b
 
@@ -84,6 +129,11 @@ def fmt_bytes(b: float) -> str:
 
 
 # ---- Table I as printed (for benchmark comparison) -----------------------
+# The paper's own published columns, kept verbatim so benchmarks can
+# compare our closed-form model against the printed numbers row by row
+# (benchmarks/comm_table.py).  The two RMAT rows are the paper's headline
+# claims and our model reproduces them exactly; SNAP rows use the
+# unpublished per-graph ⌈log D⌉, hence the ≤ ~5% deviation noted there.
 # name: (n, m, triangles, wedges, k, p, previous, this_paper, speedup)
 TABLE_I = {
     "ca-GrQc": (5242, 14484, 48260, 165798, 0.522, 4, "514KB", "225KB", 2.28),
@@ -106,8 +156,15 @@ TABLE_I = {
 def wire_bytes_report(
     m2: int, p: int, *, cap_chunk: int, cap_hedge: int, n_levels: int, n: int
 ) -> dict[str, float]:
-    """Bytes our `parallel_tc` implementation actually moves (int32 wire),
-    per collective, per full algorithm run, summed over devices."""
+    """Bytes our ``parallel_tc`` implementation actually moves (int32
+    wire), per collective, per full algorithm run, summed over devices.
+
+    This is the wire-bytes view (module docstring): capacities are the
+    *static* buffers the shard function allocates (``cap_chunk`` padded
+    transpose chunks, ``cap_hedge`` horizontal slots — see
+    ``parallel_tc._capacities``), so each term is the paper-bits term's
+    hardware spelling: same shape in (n, m, k, p), int32 words instead of
+    packed bits, capacity slack instead of exact counts."""
     word = 4
     return {
         # level vector pmax per BFS level, all-reduce ~ 2x payload per device

@@ -60,6 +60,55 @@ def horizontal_queries(g, level):
     return qu, qw, d_small, d_large, n_h
 
 
+def mindeg_per_slot(src, dst, deg):
+    """Host-side ``(und, mind)`` per edge slot: ``und`` marks the
+    undirected (``src < dst``) slots — sentinel pads have ``src == dst``
+    and drop out — and ``mind`` their smaller endpoint's degree (0
+    elsewhere).  Accepts any slot layout (flat edge list or per-shard
+    2-D), preserving the shape.
+
+    This is the ONE place the bucket planners' exceedance semantics are
+    encoded; every bound they consume counts ``mind > w`` strictly (a
+    query with d_small == w fits a w-wide bucket), so keep callers and
+    this helper in lockstep.
+    """
+    import numpy as np
+
+    und = src < dst
+    if deg.shape[0] == 0:
+        return und, np.zeros_like(src)
+    hi = deg.shape[0] - 1
+    mind = np.where(
+        und,
+        np.minimum(deg[np.clip(src, 0, hi)], deg[np.clip(dst, 0, hi)]),
+        0,
+    )
+    return und, mind
+
+
+def mindeg_exceedance(g, widths) -> tuple[int, ...]:
+    """Host-side degree histogram bound for the planned-bucket engine:
+    for each width ``w``, the number of undirected edges whose smaller
+    endpoint has degree > ``w``.
+
+    The horizontal queries of *any* BFS are a subset of the undirected
+    edges, so these counts upper-bound every bucket's occupancy no matter
+    which root Algorithm 2 runs from — which is what lets
+    ``plan_buckets_bounded`` lay out static shard_map-safe bucket rows
+    before the BFS has happened (DESIGN.md §3).
+    """
+    import numpy as np
+
+    import jax
+
+    _, mind = mindeg_per_slot(
+        np.asarray(jax.device_get(g.src)),
+        np.asarray(jax.device_get(g.dst)),
+        np.asarray(jax.device_get(g.deg)),
+    )
+    return tuple(int((mind > int(w)).sum()) for w in widths)
+
+
 def classify_edges(src, dst, level, n_nodes):
     """Return int8 class per directed edge: 0 pad/invalid, 1 horizontal,
     2 adjacent-level (tree or strut).  (Tree-vs-strut needs parent pointers,

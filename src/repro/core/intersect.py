@@ -1,65 +1,530 @@
-"""Neighborhood-intersection primitives (pure-jnp reference path).
+"""The neighborhood-intersection engine: plan once, execute many.
 
-The paper uses hash tables to intersect the adjacency lists of a
-horizontal edge's endpoints.  Pointer-chasing hash probes are hostile to
-the TPU VPU, so the framework's reference strategy is *probe-from-the-
-smaller-side + branch-free binary search in CSR* (same O(d_u · log d_w)
-bound as the paper's binary-search variant, §III-A):
+The paper intersects the adjacency lists of a horizontal edge's endpoints
+with hash tables.  Pointer-chasing hash probes are hostile to the TPU
+VPU, so the framework's strategy is *probe-from-the-smaller-side +
+branch-free membership tests* (same O(d_small · log d_large) bound as the
+paper's binary-search variant, §III-A) — and both the sequential
+Algorithm 1 and the distributed Algorithm 2 run their probing through the
+single engine in this module (DESIGN.md §2–§3):
 
-    for each query edge (u, w):  candidates = N(u_small) (padded to d_max)
-                                 found[j]  = candidates[j] ∈ N(u_large)
+* **Adjacency views.**  ``CsrAdjacency`` reads a ``Graph``'s CSR arrays;
+  ``PairListAdjacency`` reads the lex-sorted ``(owner, value)`` pair list
+  a device holds after Algorithm 2's sample-sort transpose.  Both expose
+  the same ``bounds(v) -> (starts, lens)`` view into one flat sorted
+  array, which is all the probe math needs.
 
-``kernels/intersect`` provides the Pallas VMEM-tiled version of exactly
-this loop; this module is its ``ref``-equivalent and the small-graph path.
+* **Plans.**  ``plan_buckets`` (exact, host-side, from a degree profile)
+  and ``plan_buckets_bounded`` (safe static caps when the profile is only
+  known as an upper bound — the shard_map case) both produce an
+  ``IntersectPlan``: a tuple of contiguous query-row buckets, each with a
+  static row count and candidate/target widths.  A plan is hashable and
+  jit-/shard_map-static.
+
+* **Execution.**  ``run_plan`` slices the (degree-sorted) query block at
+  the plan's static boundaries and probes each bucket at its own padded
+  width through ``backend="jnp" | "pallas"``.  Shapes depend only on the
+  plan, never on the data, so the same call is valid under ``jit`` and
+  inside ``shard_map`` — every kernel improvement lands in both
+  algorithms at once.
+
+``kernels/intersect`` provides the Pallas VMEM-tiled membership/count
+kernels; the ``jnp`` backend is their ``ref``-equivalent and the
+small-graph path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.graph.csr import Graph, bounded_binary_search, gather_neighbors
+from repro.graph.csr import (
+    Graph,
+    bounded_binary_search,
+    gather_rows,
+)
+from repro.kernels.intersect.intersect import CAND_PAD, TARG_PAD
+
+#: Default small-endpoint-degree bucket boundaries: queries whose smaller
+#: endpoint has degree <= w probe at candidate width w (plus an implicit
+#: top bucket at the max/capped width).
+DEFAULT_BUCKET_WIDTHS = (32, 256)
 
 
-def probe_common_neighbors(
-    g: Graph,
-    eu: jnp.ndarray,
-    ew: jnp.ndarray,
-    *,
-    d_max: int,
-    d_search: int | None = None,
-):
-    """For query edges ``(eu, ew)`` (sentinel-padded with ``n``), return
-    ``(apexes int32[q, d_max], found bool[q, d_max])`` — the candidate
-    common neighbors and the intersection membership mask.
+# --------------------------------------------------------------- views
 
-    ``d_max`` bounds the *candidate* width (smaller endpoint's list);
-    ``d_search`` bounds the binary-search depth over the *larger*
-    endpoint's list and must be >= its degree.  The bucketed pipeline
-    passes the bucket's max large-endpoint degree; ``None`` falls back to
-    ``d_max`` (the seed convention — only safe when ``d_max`` is the
-    global max degree).
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CsrAdjacency:
+    """Adjacency view over a ``Graph``'s CSR arrays (Algorithm 1).
+
+    ``flat`` is the CSR neighbor array (``g.dst``); vertex ``v``'s sorted
+    neighbor list is ``flat[row_offsets[v] : row_offsets[v] + deg[v]]``.
     """
-    n = g.n_nodes
-    num_steps = max(1, math.ceil(math.log2((d_search or d_max) + 1)))
-    deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
-    eu_c = jnp.clip(eu, 0, n)
-    ew_c = jnp.clip(ew, 0, n)
-    # probe from the smaller-degree endpoint
-    swap = deg_ext[ew_c] < deg_ext[eu_c]
-    small = jnp.where(swap, ew_c, eu_c)
-    large = jnp.where(swap, eu_c, ew_c)
-    cand = gather_neighbors(g, small, width=d_max, pad=n)
-    valid = cand < n  # pad is the sentinel vertex; real neighbors are < n
-    starts_l = jnp.broadcast_to(g.row_offsets[large][:, None], cand.shape)
-    len_l = jnp.broadcast_to(deg_ext[large][:, None], cand.shape)
-    found = bounded_binary_search(
-        g.dst, starts_l, len_l, cand, num_steps=num_steps
+
+    flat: jnp.ndarray
+    row_offsets: jnp.ndarray
+    deg: jnp.ndarray
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def from_graph(cls, g: Graph) -> "CsrAdjacency":
+        return cls(flat=g.dst, row_offsets=g.row_offsets, deg=g.deg,
+                   n_nodes=g.n_nodes)
+
+    def bounds(self, v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """``(starts, lens)`` of each vertex's slice of ``flat``; any
+        ``v >= n_nodes`` (sentinel) gets length 0."""
+        n = self.n_nodes
+        vc = jnp.clip(v, 0, n)
+        deg_ext = jnp.concatenate([self.deg, jnp.zeros((1,), jnp.int32)])
+        return self.row_offsets[vc], jnp.where(v < n, deg_ext[vc], 0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PairListAdjacency:
+    """Adjacency view over lex-sorted ``(owner, value)`` pairs — the shard
+    Algorithm 2 receives from its all-to-all transpose.
+
+    ``owners`` is sorted ascending (padding owners sort last because the
+    sentinel exceeds every real vertex id) and ``values`` is co-sorted, so
+    the sublist of vertex ``v`` is a contiguous, sorted slice found by two
+    ``searchsorted`` probes.  No CSR materialization, no extra memory.
+    """
+
+    owners: jnp.ndarray
+    values: jnp.ndarray
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def flat(self) -> jnp.ndarray:
+        return self.values
+
+    def bounds(self, v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """``(starts, lens)`` of each vertex's sublist; any ``v >=
+        n_nodes`` (sentinel or transpose padding) gets length 0."""
+        lo = jnp.searchsorted(self.owners, v, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(self.owners, v, side="right").astype(jnp.int32)
+        return lo, jnp.where(v < self.n_nodes, hi - lo, 0)
+
+
+# --------------------------------------------------------------- plans
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanBucket:
+    """One contiguous query-row range probed at one static width pair.
+
+    ``[start, start + rows)`` are the rows sliced from the query block;
+    the first ``count`` are real queries, rows past ``count`` are masked
+    (they may alias the next bucket's rows — padding never re-probes
+    them).  ``d_cand`` is the candidate gather width (smaller endpoint),
+    ``d_targ`` the target width / binary-search depth (larger endpoint).
+    """
+
+    start: int
+    count: int
+    rows: int
+    d_cand: int
+    d_targ: int
+
+
+@dataclasses.dataclass(frozen=True)
+class IntersectPlan:
+    """A static, hashable execution plan for one query-block layout.
+
+    Produced host-side once (``plan_buckets`` / ``plan_buckets_bounded``)
+    and executed many times (``run_plan``) — under jit the plan is a
+    static argument, inside shard_map it is a closure constant, so all
+    shapes are fixed per plan.
+    """
+
+    buckets: tuple[PlanBucket, ...]
+    backend: str = "jnp"
+    interpret: bool = True
+    query_chunk: int | None = None
+    #: sort the query block by ascending-rank = descending min-degree
+    #: in-trace before slicing buckets (the shard_map path, where the
+    #: host could not pre-sort).  Exact plans pre-sorted on the host
+    #: leave this False.
+    sort_queries: bool = False
+
+    @property
+    def total_rows(self) -> int:
+        return max((b.start + b.rows for b in self.buckets), default=0)
+
+    @property
+    def probe_rows(self) -> int:
+        return sum(b.rows for b in self.buckets)
+
+    @property
+    def probe_cells(self) -> float:
+        return float(sum(float(b.rows) * b.d_cand for b in self.buckets))
+
+    @property
+    def peak_rows(self) -> int:
+        return max(
+            (min(b.rows, self.query_chunk or b.rows) for b in self.buckets),
+            default=0,
+        )
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return max(mult, -(-x // mult) * mult)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def plan_buckets(
+    ds_h,
+    dl_h,
+    *,
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    d_cap: int | None = None,
+    row_mult: int = 64,
+    backend: str = "jnp",
+    interpret: bool = True,
+    query_chunk: int | None = None,
+) -> IntersectPlan:
+    """Exact host-side plan from a known per-query degree profile.
+
+    ``ds_h``/``dl_h`` are the small/large endpoint degrees of the real
+    queries, already sorted ascending in ``ds_h`` (the layout
+    ``horizontal_queries`` produces).  Buckets are contiguous
+    ``searchsorted`` ranges; ``d_cand`` is the bucket's width boundary
+    (clamped to ``d_cap`` if given — a lossy candidate-list cap, see
+    ``triangle_count``), ``d_targ`` the widest larger-endpoint list in
+    the bucket, 128-aligned.  Widths are rounded (pow2 top, 128-aligned
+    ``d_targ``, ``row_mult``-padded rows) so same-scale graphs with
+    different degree profiles share jit cache entries.
+    """
+    ds_h = np.asarray(ds_h)
+    dl_h = np.asarray(dl_h)
+    H = int(ds_h.shape[0])
+    buckets = []
+    if H:
+        top = _next_pow2(max(int(ds_h[-1]), 1))
+        if d_cap is not None:
+            top = min(top, int(d_cap))
+        widths = sorted(
+            w for w in {int(w) for w in bucket_widths} if 0 < w < top
+        )
+        widths.append(top)
+        start = 0
+        for w in widths:
+            end = (
+                int(np.searchsorted(ds_h, w, side="right")) if w < top else H
+            )
+            if end <= start:
+                continue
+            count = end - start
+            buckets.append(PlanBucket(
+                start=start,
+                count=count,
+                rows=_ceil_to(count, row_mult),
+                d_cand=w,
+                d_targ=_ceil_to(int(dl_h[start:end].max()), 128),
+            ))
+            start = end
+    return IntersectPlan(
+        buckets=tuple(buckets), backend=backend, interpret=interpret,
+        query_chunk=query_chunk, sort_queries=False,
     )
-    found = found & valid & (eu < n)[:, None] & (ew < n)[:, None]
-    return cand, found
+
+
+def plan_buckets_bounded(
+    total_rows: int,
+    *,
+    d_pad: int,
+    exceed: tuple[tuple[int, int], ...] | None = None,
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    row_mult: int = 1,
+    backend: str = "jnp",
+    interpret: bool = True,
+    query_chunk: int | None = None,
+) -> IntersectPlan:
+    """Safe static plan when the per-query degree profile is unknown at
+    trace time — the shard_map case, where Algorithm 2's horizontal
+    rounds arrive as data-dependent gathers.
+
+    ``exceed`` is a tuple of ``(width, bound)`` pairs: for each candidate
+    bucket width, an upper bound on how many queries of *any* block this
+    plan will run can have min-endpoint degree above that width (e.g.
+    ``core.edges.mindeg_exceedance`` — the whole graph's histogram bounds
+    every BFS's horizontal subset).  Buckets are laid out widest-first
+    and sized from those bounds, and ``run_plan`` sorts the block by
+    descending min-degree (``sort_queries=True``), so by construction
+    every query lands in a bucket at least as wide as its candidate
+    list.  If a bound is violated (only possible when the caller's
+    ``exceed`` was not actually an upper bound, or ``d_pad`` undersizes
+    the max degree) the run flags ``overflow`` instead of miscounting
+    silently.  ``exceed=None`` degenerates to one ``d_pad``-wide bucket —
+    always safe, no host knowledge needed (the dry-run path).
+    """
+    T = _ceil_to(int(total_rows), row_mult) if total_rows > 0 else 0
+    if T == 0:
+        return IntersectPlan((), backend, interpret, query_chunk, False)
+    top = int(d_pad)
+    bound = dict(exceed or ())
+    widths = sorted(
+        w for w in {int(w) for w in bucket_widths}
+        if 0 < w < top and w in bound
+    )
+    widths.append(top)  # ascending, widest last
+    buckets = []
+    used = 0
+    for i in range(len(widths) - 1, -1, -1):  # allocate widest-first
+        w = widths[i]
+        if i == 0:
+            rows = T - used  # narrowest bucket absorbs the remainder
+        else:
+            # every query with min-degree > widths[i-1] must rank before
+            # this bucket's end — size it so cumulative rows cover the bound
+            need = int(bound[widths[i - 1]])
+            need_rows = _ceil_to(need, row_mult) if need > 0 else 0
+            rows = min(T - used, max(0, need_rows - used))
+        if rows <= 0:
+            continue
+        buckets.append(PlanBucket(
+            start=used, count=rows, rows=rows, d_cand=w, d_targ=top,
+        ))
+        used += rows
+    return IntersectPlan(
+        buckets=tuple(buckets), backend=backend, interpret=interpret,
+        query_chunk=query_chunk, sort_queries=len(buckets) > 1,
+    )
+
+
+# ----------------------------------------------------------- execution
+
+
+class EngineCounts(NamedTuple):
+    """``run_plan`` result.  Without ``level``, ``c1`` is the total hit
+    count and ``c2`` is 0; with ``level``, ``(c1, c2)`` are the paper's
+    diff-level / same-level apex splits.  ``overflow`` is True iff some
+    real query's candidate (or target) list exceeded its bucket width —
+    bounded plans set it instead of silently undercounting, and exact
+    plans only set it under an explicit ``d_cap``/``d_max`` clamp (the
+    documented lossy candidate truncation, where it marks the clipped
+    hub queries)."""
+
+    c1: jnp.ndarray
+    c2: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+def _swapped_bounds(su, lu, sw, lw, row_ok):
+    """Per-query (small-side, large-side) slice bounds from the two
+    endpoints' precomputed bounds, probing from the smaller list; masked
+    rows gather nothing."""
+    swap = lw < lu
+    s_s = jnp.where(swap, sw, su)
+    l_s = jnp.where(row_ok, jnp.where(swap, lw, lu), 0)
+    s_l = jnp.where(swap, su, sw)
+    l_l = jnp.where(row_ok, jnp.where(swap, lu, lw), 0)
+    return s_s, l_s, s_l, l_l
+
+
+def _gather_cand_targ(flat, s_s, l_s, s_l, l_l, *, d_cand, d_targ,
+                      need_targ):
+    """The engine's one dense-gather site: ``(cand, targ | None,
+    overflow)``.  Every probing path routes through here so the pad
+    conventions and the width-overflow predicate cannot diverge."""
+    overflow = jnp.any((l_s > d_cand) | (l_l > d_targ))
+    cand = gather_rows(
+        flat, s_s, jnp.minimum(l_s, d_cand), width=d_cand, pad=CAND_PAD
+    )
+    targ = None
+    if need_targ:
+        targ = gather_rows(
+            flat, s_l, jnp.minimum(l_l, d_targ), width=d_targ, pad=TARG_PAD
+        )
+    return cand, targ, overflow
+
+
+def _probe_rows(adj, qu, qw, row_ok, *, d_cand, d_targ, backend, interpret,
+                bounds=None):
+    """One fixed-width block probe: ``(cand int32[q, d_cand] (pad -1),
+    found bool[q, d_cand], overflow)``.  Both backends share this gather,
+    so their outputs are bit-identical elementwise.  ``bounds`` are the
+    precomputed ``(su, lu, sw, lw)`` endpoint bounds (``run_plan`` passes
+    them to avoid recomputing the searchsorted passes per bucket)."""
+    if bounds is None:
+        bounds = (*adj.bounds(qu), *adj.bounds(qw))
+    s_s, l_s, s_l, l_l = _swapped_bounds(*bounds, row_ok)
+    cand, targ, overflow = _gather_cand_targ(
+        adj.flat, s_s, l_s, s_l, l_l,
+        d_cand=d_cand, d_targ=d_targ, need_targ=(backend != "jnp"),
+    )
+    if backend == "jnp":
+        # search depth sized by d_targ over the UNclamped list — for exact
+        # plans (d_targ >= every large degree) the search converges; for a
+        # too-small d_targ it under-searches, reproducing the seed's
+        # d_max-truncation semantics bit-for-bit (and overflow is set)
+        num_steps = max(1, math.ceil(math.log2(d_targ + 1)))
+        starts = jnp.broadcast_to(s_l[:, None], cand.shape)
+        lens = jnp.broadcast_to(l_l[:, None], cand.shape)
+        found = bounded_binary_search(
+            adj.flat, starts, lens, cand, num_steps=num_steps
+        )
+        return cand, found & (cand >= 0) & row_ok[:, None], overflow
+    from repro.kernels.intersect.intersect import intersect_pallas_hits
+
+    found = intersect_pallas_hits(cand, targ, interpret=interpret)
+    return cand, found & row_ok[:, None], overflow
+
+
+def _count_chunk(
+    adj, qu_c, qw_c, bounds_c, base, count,
+    *, d_cand, d_targ, level, backend, interpret,
+):
+    """Summed (c1, c2, overflow) for one chunk of bucket rows.  ``base``
+    is the chunk's offset within the bucket (masks rows past ``count``);
+    ``bounds_c`` the chunk's precomputed endpoint bounds."""
+    n = adj.n_nodes
+    pos = base + jnp.arange(qu_c.shape[0], dtype=jnp.int32)
+    row_ok = (pos < count) & (qu_c < n) & (qw_c < n)
+    # data-derived zero: keeps fori_loop carries device-varying in shard_map
+    zero = (qu_c[0] ^ qu_c[0]).astype(jnp.int32)
+    if backend == "pallas":
+        # counting stays fully on-kernel: no per-candidate mask leaves VMEM
+        from repro.kernels.intersect.intersect import (
+            intersect_pallas,
+            intersect_pallas_count,
+        )
+
+        s_s, l_s, s_l, l_l = _swapped_bounds(*bounds_c, row_ok)
+        cand, targ, overflow = _gather_cand_targ(
+            adj.flat, s_s, l_s, s_l, l_l,
+            d_cand=d_cand, d_targ=d_targ, need_targ=True,
+        )
+        if level is None:
+            cnt = intersect_pallas_count(cand, targ, interpret=interpret)
+            return jnp.sum(cnt, dtype=jnp.int32), zero, overflow
+        lev_ext = jnp.concatenate([level, jnp.full((1,), -7, jnp.int32)])
+        lev_c = jnp.where(cand >= 0, lev_ext[jnp.clip(cand, 0, n)], -7)
+        lev_u = jnp.where(qu_c < n, lev_ext[jnp.clip(qu_c, 0, n)], -9)
+        c1, c2 = intersect_pallas(
+            cand, targ, lev_c, lev_u, interpret=interpret
+        )
+        return (
+            jnp.sum(c1, dtype=jnp.int32),
+            jnp.sum(c2, dtype=jnp.int32),
+            overflow,
+        )
+    cand, found, overflow = _probe_rows(
+        adj, qu_c, qw_c, row_ok,
+        d_cand=d_cand, d_targ=d_targ, backend=backend, interpret=interpret,
+        bounds=bounds_c,
+    )
+    if level is None:
+        return jnp.sum(found, dtype=jnp.int32), zero, overflow
+    lev_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
+    lev_apex = lev_ext[jnp.clip(cand, 0, n)]
+    lev_u = lev_ext[jnp.clip(qu_c, 0, n)]
+    same = found & (lev_apex == lev_u[:, None])
+    c2 = jnp.sum(same, dtype=jnp.int32)
+    c1 = jnp.sum(found, dtype=jnp.int32) - c2
+    return c1, c2, overflow
+
+
+def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
+    """Execute a bucket plan against an adjacency view.
+
+    ``qu``/``qw`` are the query endpoints (entries ``>= adj.n_nodes`` are
+    sentinels and never counted); the block is padded to the plan's total
+    rows and, for ``sort_queries`` plans, degree-sorted descending
+    in-trace.  Coverage is the *planner's* contract: rows beyond
+    ``plan.total_rows`` are deliberately not probed (that is how the
+    sequential pipeline skips the non-horizontal compacted tail and how
+    ``cap_h`` truncates — the pipeline flags the latter as
+    ``h_overflow``); a caller that wants full coverage must plan the full
+    block.  Shapes depend only on ``(plan, len(qu))`` — never on the
+    data — so the same call is valid under ``jit`` (pass the plan as a
+    static arg; see ``run_plan_jit``) and inside ``shard_map`` (close
+    over the plan).  With ``level``, hits are split into the paper's
+    (c1, c2) by apex level; without, every hit counts once (Algorithm 2's
+    exactly-once semantics after N-hat dedup).
+    """
+    if qu.shape[0] == 0 or not plan.buckets:
+        z = jnp.int32(0)
+        return EngineCounts(z, z, jnp.zeros((), bool))
+    n = adj.n_nodes
+    need = plan.total_rows
+    if qu.shape[0] < need:
+        fill = jnp.full((need - qu.shape[0],), n, qu.dtype)
+        qu = jnp.concatenate([qu, fill])
+        qw = jnp.concatenate([qw, fill])
+    # endpoint bounds are computed ONCE per block (they feed the sort key
+    # AND every bucket's probe — in ring mode this runs p times per device,
+    # so the searchsorted passes are worth hoisting), then permuted and
+    # sliced alongside the queries
+    su, lu = adj.bounds(qu)
+    sw, lw = adj.bounds(qw)
+    if plan.sort_queries:
+        valid = (qu < n) & (qw < n)
+        key = jnp.where(valid, jnp.minimum(lu, lw), -1)
+        order = jnp.argsort(-key)  # descending; invalid rows sort last
+        qu, qw = qu[order], qw[order]
+        su, lu, sw, lw = su[order], lu[order], sw[order], lw[order]
+    zero = (qu[0] ^ qu[0]).astype(jnp.int32)  # device-varying under shard_map
+    c1, c2, ovf = zero, zero, zero != 0
+    for b in plan.buckets:
+        sliced = tuple(
+            jax.lax.slice_in_dim(x, b.start, b.start + b.rows)
+            for x in (qu, qw, su, lu, sw, lw)
+        )
+        chunk = min(plan.query_chunk or b.rows, b.rows)
+        if b.rows % chunk:
+            raise ValueError(
+                f"bucket rows={b.rows} not a multiple of "
+                f"query_chunk={chunk} (plan the rows with row_mult=chunk)"
+            )
+        if chunk == b.rows:
+            d1, d2, do = _count_chunk(
+                adj, sliced[0], sliced[1], sliced[2:], 0, b.count,
+                d_cand=b.d_cand, d_targ=b.d_targ, level=level,
+                backend=plan.backend, interpret=plan.interpret,
+            )
+            c1, c2, ovf = c1 + d1, c2 + d2, ovf | do
+        else:
+            def body(c, carry, sliced=sliced, b=b, chunk=chunk):
+                a1, a2, o = carry
+                sl = tuple(
+                    jax.lax.dynamic_slice(x, (c * chunk,), (chunk,))
+                    for x in sliced
+                )
+                d1, d2, do = _count_chunk(
+                    adj, sl[0], sl[1], sl[2:], c * chunk, b.count,
+                    d_cand=b.d_cand, d_targ=b.d_targ, level=level,
+                    backend=plan.backend, interpret=plan.interpret,
+                )
+                return a1 + d1, a2 + d2, o | do
+
+            c1, c2, ovf = jax.lax.fori_loop(
+                0, b.rows // chunk, body, (c1, c2, ovf)
+            )
+    return EngineCounts(c1, c2, ovf)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_plan_jit(adj, qu, qw, plan: IntersectPlan, level=None) -> EngineCounts:
+    """``run_plan`` under one jit: the whole bucket loop compiles to a
+    single program keyed on ``(plan, shapes)`` — the host-caller form
+    (Algorithm 1); shard_map bodies call ``run_plan`` directly."""
+    return run_plan(adj, qu, qw, plan, level=level)
+
+
+# ------------------------------------------------- probe-level wrappers
 
 
 def resolve_backend(
@@ -103,26 +568,46 @@ def probe_block(
     """Backend-dispatched probe: ``(apexes int32[q, d_cand], found bool)``.
 
     Both backends gather candidates from the smaller-degree endpoint in
-    CSR order, so their outputs are bit-identical; ``"jnp"`` tests
-    membership by branch-free binary search in CSR, ``"pallas"`` by the
-    VMEM-tiled all-pairs compare kernel (``intersect_pallas_hits``).
-    ``d_targ`` (pallas only) is the dense width of the larger side.
+    CSR order through the engine's shared gather, so their outputs are
+    bit-identical; ``"jnp"`` tests membership by branch-free binary
+    search in CSR, ``"pallas"`` by the VMEM-tiled all-pairs compare
+    kernel (``intersect_pallas_hits``).  ``d_targ`` bounds the larger
+    side's dense width and search depth.  Returned apexes are
+    sentinel-padded with ``n`` (the finding pipeline's convention).
     """
-    if backend == "jnp":
-        return probe_common_neighbors(
-            g, qu, qw, d_max=d_cand, d_search=d_targ
-        )
-    from repro.kernels.intersect.intersect import intersect_pallas_hits
-    from repro.kernels.intersect.ops import gather_query_blocks
-
-    n = g.n_nodes
-    level_dummy = jnp.zeros((n,), jnp.int32)  # levels unused for membership
-    cand, targ, _, _ = gather_query_blocks(
-        g, qu, qw, level_dummy, d_cand=d_cand, d_targ=d_targ or d_cand
+    adj = CsrAdjacency.from_graph(g)
+    row_ok = (qu < g.n_nodes) & (qw < g.n_nodes)
+    cand, found, _ = _probe_rows(
+        adj, qu, qw, row_ok,
+        d_cand=d_cand, d_targ=d_targ or d_cand,
+        backend=backend, interpret=interpret,
     )
-    found = intersect_pallas_hits(cand, targ, interpret=interpret)
-    cand = jnp.where(cand >= 0, cand, n)  # match the jnp probe's sentinel
-    return cand, found
+    return jnp.where(cand >= 0, cand, g.n_nodes), found
+
+
+def probe_common_neighbors(
+    g: Graph,
+    eu: jnp.ndarray,
+    ew: jnp.ndarray,
+    *,
+    d_max: int,
+    d_search: int | None = None,
+):
+    """For query edges ``(eu, ew)`` (sentinel-padded with ``n``), return
+    ``(apexes int32[q, d_max], found bool[q, d_max])`` — the candidate
+    common neighbors and the intersection membership mask.
+
+    ``d_max`` bounds the *candidate* width (smaller endpoint's list);
+    ``d_search`` bounds the binary-search depth over the *larger*
+    endpoint's list and must be >= its degree for exact results.  The
+    planned pipeline passes the bucket's max large-endpoint degree;
+    ``None`` falls back to ``d_max`` (the seed convention — only safe
+    when ``d_max`` is the global max degree).
+    """
+    return probe_block(
+        g, eu, ew, d_cand=d_max, d_targ=d_search, backend="jnp",
+        interpret=True,
+    )
 
 
 @functools.partial(
@@ -141,8 +626,9 @@ def count_common_neighbors(
     interpret: bool = True,
     query_chunk: int | None = None,
 ):
-    """Summed ``(c1, c2)`` (diff-level / same-level apex hits) over a
-    query block — the per-bucket unit of the compacted pipeline.
+    """Summed ``(c1, c2)`` (diff-level / same-level apex hits) over one
+    fixed-width query block — a single-bucket ``run_plan`` in disguise,
+    kept as the stable block-level API (kernel tests, external callers).
 
     ``query_chunk`` bounds peak memory by probing the rows in
     ``query_chunk``-sized fori-loop slices (rows must be a multiple);
@@ -152,46 +638,12 @@ def count_common_neighbors(
     chunk = rows if query_chunk is None else min(query_chunk, rows)
     if rows % chunk:
         raise ValueError(f"rows={rows} not a multiple of query_chunk={chunk}")
-
-    def one(qu_c, qw_c):
-        if backend == "pallas":
-            from repro.kernels.intersect.intersect import intersect_pallas
-            from repro.kernels.intersect.ops import gather_query_blocks
-
-            cand, targ, lev_c, lev_u = gather_query_blocks(
-                g, qu_c, qw_c, level, d_cand=d_cand, d_targ=d_targ or d_cand
-            )
-            c1, c2 = intersect_pallas(
-                cand, targ, lev_c, lev_u, interpret=interpret
-            )
-            return (
-                jnp.sum(c1, dtype=jnp.int32),
-                jnp.sum(c2, dtype=jnp.int32),
-            )
-        cand, found = probe_common_neighbors(
-            g, qu_c, qw_c, d_max=d_cand, d_search=d_targ
-        )
-        lev_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
-        lev_apex = lev_ext[jnp.clip(cand, 0, g.n_nodes)]
-        lev_u = lev_ext[jnp.clip(qu_c, 0, g.n_nodes)]
-        same = found & (lev_apex == lev_u[:, None])
-        c2 = jnp.sum(same, dtype=jnp.int32)
-        c1 = jnp.sum(found, dtype=jnp.int32) - c2
-        return c1, c2
-
-    if chunk == rows:
-        return one(qu, qw)
-
-    def body(c, carry):
-        c1, c2 = carry
-        sl_u = jax.lax.dynamic_slice(qu, (c * chunk,), (chunk,))
-        sl_w = jax.lax.dynamic_slice(qw, (c * chunk,), (chunk,))
-        d1, d2 = one(sl_u, sl_w)
-        return c1 + d1, c2 + d2
-
-    return jax.lax.fori_loop(
-        0, rows // chunk, body, (jnp.int32(0), jnp.int32(0))
+    plan = IntersectPlan(
+        buckets=(PlanBucket(0, rows, rows, d_cand, d_targ or d_cand),),
+        backend=backend, interpret=interpret, query_chunk=chunk,
     )
+    eng = run_plan(CsrAdjacency.from_graph(g), qu, qw, plan, level=level)
+    return eng.c1, eng.c2
 
 
 def edge_exists(g: Graph, qu: jnp.ndarray, qv: jnp.ndarray) -> jnp.ndarray:

@@ -1,6 +1,7 @@
 """Algorithm 2 — communication-optimal parallel cover-edge triangle counting.
 
-SPMD mapping of the paper onto a 1-D device axis via ``shard_map``:
+SPMD mapping of the paper onto a 1-D device axis via ``shard_map``
+(DESIGN.md §3 walks the whole chain):
 
   line 2      parallel BFS            -> ``bfs_levels(axis_name=...)``
                                          (one int32 pmax of the level vector
@@ -13,8 +14,11 @@ SPMD mapping of the paper onto a 1-D device axis via ``shard_map``:
   lines 29-43 horizontal-edge rounds  -> all_gather of the horizontal-edge
                                          shard (volume k·m·p, same as the
                                          paper's p-round pairwise swap),
-                                         then purely-local intersections of
-                                         the transposed sublists
+                                         then purely-local planned-bucket
+                                         intersections of the transposed
+                                         sublists through the shared engine
+                                         (``core.intersect.run_plan`` over a
+                                         ``PairListAdjacency`` view)
   line 44     reduction               -> psum
 
 Because the modified neighborhoods break symmetry, every triangle is
@@ -22,7 +26,12 @@ counted exactly once (no /3 here — that dedup is the point of N-hat).
 
 All shapes are static; the two data-dependent capacities carry overflow
 flags (regular sampling bounds any receiver at 2x the average — the flags
-make the bound *checked* instead of assumed).
+make the bound *checked* instead of assumed).  The intersection plan is
+likewise static: ``plan_hedge_rounds`` sizes its degree buckets on the
+host from the graph's degree histogram (an upper bound valid for any
+BFS), and ``run_plan`` degree-sorts each gathered round in-trace so every
+query provably fits its bucket — bucket-width mis-fits flag overflow
+instead of miscounting.
 """
 from __future__ import annotations
 
@@ -36,9 +45,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import pvary, shard_map
 from repro.core.bfs import bfs_levels
-from repro.core.edges import horizontal_mask
+from repro.core.edges import horizontal_mask, mindeg_exceedance
+from repro.core.intersect import (
+    DEFAULT_BUCKET_WIDTHS,
+    IntersectPlan,
+    PairListAdjacency,
+    plan_buckets_bounded,
+    resolve_backend,
+    run_plan,
+)
 from repro.core.sampling import repartition_by_value
-from repro.graph.csr import Graph
+from repro.graph.csr import Graph, max_degree
 from repro.graph.partition import shard_edges
 
 
@@ -54,55 +71,110 @@ class ParallelTCResult:
     recv_counts: jnp.ndarray  # transposed elements per device
 
 
-def _lex_lower_bound(keys_a, keys_b, qa, qb, *, num_steps: int, lo, hi):
-    """Branch-free lower bound for lexicographic (a, b) keys."""
-    last = keys_a.shape[0] - 1
-    for _ in range(num_steps):
-        cont = lo < hi
-        mid = (lo + hi) // 2
-        ms = jnp.clip(mid, 0, last)
-        ka, kb = keys_a[ms], keys_b[ms]
-        less = ((ka < qa) | ((ka == qa) & (kb < qb))) & cont
-        lo = jnp.where(less, mid + 1, lo)
-        hi = jnp.where(cont & ~less, mid, hi)
-    return lo
+def _capacities(m2: int, p: int, slack: float) -> tuple[int, int, int]:
+    """Static capacities for a (n, 2m) graph on p devices: per-device edge
+    slots, per-destination transpose chunk, horizontal-edge buffer.
+    Only ``cap_chunk`` depends on ``slack``; ``cap_edges``/``cap_hedge``
+    are pure functions of (m2, p), so the intersection plan and the shard
+    body always agree on the horizontal buffer size."""
+    cap_edges = max(1, math.ceil(m2 / p * 2))
+    cap_chunk = max(4, math.ceil(slack * m2 / (p * p)))
+    cap_hedge = cap_edges // 2 + 1
+    return cap_edges, cap_chunk, cap_hedge
 
 
-def _intersect_block(Rv, Rx, hv, hw, *, d_pad: int, n: int):
-    """Count |sublist(v) ∩ sublist(w)| for each (v, w) query against the
-    received (v, x)-lex-sorted pairs.  Pure function of one query block."""
-    L = Rv.shape[0]
-    inf = n + 1
-    steps_L = max(1, math.ceil(math.log2(L + 1)))
-    zeros = jnp.zeros_like(hv)
-    full = jnp.full_like(hv, L)
-    v_lo = _lex_lower_bound(Rv, Rx, hv, zeros - 1, num_steps=steps_L,
-                            lo=zeros, hi=full)
-    v_hi = _lex_lower_bound(Rv, Rx, hv, full + inf, num_steps=steps_L,
-                            lo=zeros, hi=full)
-    w_lo = _lex_lower_bound(Rv, Rx, hw, zeros - 1, num_steps=steps_L,
-                            lo=zeros, hi=full)
-    w_hi = _lex_lower_bound(Rv, Rx, hw, full + inf, num_steps=steps_L,
-                            lo=zeros, hi=full)
-    pos = jnp.arange(d_pad, dtype=jnp.int32)
-    cand_idx = v_lo[:, None] + pos[None, :]
-    cand_ok = cand_idx < v_hi[:, None]
-    cand = jnp.where(cand_ok, Rx[jnp.clip(cand_idx, 0, L - 1)], inf)
-    lo = jnp.broadcast_to(w_lo[:, None], cand.shape)
-    hi = jnp.broadcast_to(w_hi[:, None], cand.shape)
-    last = L - 1
-    for _ in range(steps_L):
-        cont = lo < hi
-        mid = (lo + hi) // 2
-        val = Rx[jnp.clip(mid, 0, last)]
-        less = (val < cand) & cont
-        lo = jnp.where(less, mid + 1, lo)
-        hi = jnp.where(cont & ~less, mid, hi)
-    found = (lo < w_hi[:, None]) & (Rx[jnp.clip(lo, 0, last)] == cand) & cand_ok
-    found = found & (hv < n)[:, None]
-    t = jnp.sum(found, dtype=jnp.int32)
-    ovf = jnp.any(((v_hi - v_lo) > d_pad) & (hv < n))
-    return t, ovf
+def _hedge_layout(
+    m2: int, p: int, mode: str, hedge_chunk: int | None
+) -> tuple[int, int]:
+    """``(rows, chunk)`` of one horizontal round's query block — the ONE
+    place this layout is computed, shared by ``plan_hedge_rounds`` and
+    ``build_tc_shard_fn`` so the plan and the shard body cannot drift.
+
+    ``chunk`` is both the fori-loop probe slice and the bucket-row
+    granularity (``row_mult == query_chunk`` keeps every bucket a whole
+    number of chunks).  The ``None`` default caps it at 1024 rather than
+    the whole buffer: a whole-buffer granularity would collapse the plan
+    to a single max-width bucket and silently give the hub padding back.
+    """
+    _, _, cap_hedge = _capacities(m2, p, slack=4.0)
+    chunk = int(hedge_chunk) if hedge_chunk else min(cap_hedge, 1024)
+    rows = p * cap_hedge if mode == "allgather" else cap_hedge
+    return rows, chunk
+
+
+def _ring_mindeg_exceedance(
+    g: Graph, p: int, widths, shards=None
+) -> tuple[int, ...]:
+    """Ring-mode bucket bound: one shared plan serves every device's
+    cap_hedge block, so each width's cap is the max over shards of that
+    shard's undirected edges above the width.  ``shard_edges`` is
+    deterministic and host-side, so this is static — and per-shard bounds
+    are ~p× tighter than the whole-graph histogram, which would otherwise
+    swallow the narrow buckets whenever cap_hedge < exceed(w).
+    ``shards``: optional pre-sharded ``(src[p, cap], dst[p, cap])``
+    (``parallel_triangle_count`` passes its own to avoid sharding twice);
+    the planner only reads edge content, so any capacity works."""
+    import numpy as np
+
+    from repro.core.edges import mindeg_per_slot
+
+    if shards is None:
+        shards = shard_edges(g, p, capacity=None)[:2]
+    s_sh, d_sh = shards
+    _, mind = mindeg_per_slot(s_sh, d_sh, np.asarray(jax.device_get(g.deg)))
+    return tuple(
+        int((mind > int(w)).sum(axis=1).max(initial=0)) for w in widths
+    )
+
+
+def plan_hedge_rounds(
+    g: Graph,
+    p: int,
+    *,
+    mode: str = "allgather",
+    hedge_chunk: int | None = None,
+    d_pad: int | None = None,
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    intersect_backend: str = "jnp",
+    interpret: bool = True,
+    shards=None,
+) -> IntersectPlan:
+    """The static intersection plan for Algorithm 2's horizontal rounds.
+
+    One query block per round: the full gathered horizontal edge set
+    (``allgather`` mode — p·cap_hedge rows, executed once) or one
+    device's shard (``ring`` mode — cap_hedge rows, executed p times).
+    Bucket caps come from degree-histogram exceedance bounds — any BFS's
+    horizontal subset is bounded by the edges present (whole graph for
+    the gathered block, per-shard max for ring blocks) — so the plan is
+    safe for whatever roots/levels the run produces.  ``hedge_chunk``
+    sets both the probe slice and the bucket-row granularity (small-
+    cap_hedge/high-p runs coarsen to whole-buffer buckets).  Exposed
+    publicly so benchmarks and examples can introspect exactly the
+    bucket layout the distributed path will execute.
+    """
+    m2 = int(jax.device_get(g.n_edges_dir))
+    if d_pad is None:
+        d_pad = max(1, max_degree(g))
+    rows, chunk = _hedge_layout(m2, p, mode, hedge_chunk)
+    widths = tuple(sorted(
+        w for w in {int(w) for w in bucket_widths} if 0 < w < d_pad
+    ))
+    if mode == "ring":
+        bounds = _ring_mindeg_exceedance(g, p, widths, shards=shards)
+    else:
+        bounds = mindeg_exceedance(g, widths)
+    exceed = tuple(zip(widths, bounds))
+    return plan_buckets_bounded(
+        rows,
+        d_pad=d_pad,
+        exceed=exceed,
+        bucket_widths=widths,
+        row_mult=chunk,
+        backend=intersect_backend,
+        interpret=interpret,
+        query_chunk=chunk,
+    )
 
 
 def _tc_shard(
@@ -114,10 +186,9 @@ def _tc_shard(
     root: int,
     cap_chunk: int,
     cap_hedge: int,
-    d_pad: int,
+    hplan: IntersectPlan,
     axis_name: str,
     mode: str = "allgather",
-    hedge_chunk: int | None = None,
     frontier_dtype: str = "int32",
 ):
     """Per-device body. ``src_i/dst_i`` int32[cap_edges] sentinel-padded."""
@@ -140,12 +211,11 @@ def _tc_shard(
         axis_name=axis_name,
         inf=inf,
     )
-    # received pairs (owner v = carry, value x) sorted by (v, x)
-    Rv, Rx = rep.carry, rep.values
-    L = Rv.shape[0]
-    steps_L = max(1, math.ceil(math.log2(L + 1)))
+    # received pairs (owner v = carry, value x) sorted by (v, x) — exactly
+    # the engine's pair-list adjacency view; sublist(v) is a sorted slice
+    adj = PairListAdjacency(owners=rep.carry, values=rep.values, n_nodes=n)
 
-    # ---- lines 29-43: horizontal-edge exchange + local intersections -
+    # ---- lines 29-43: horizontal-edge exchange + planned intersections
     is_h = horiz & (src_i < dst_i)
     order = jnp.argsort(~is_h, stable=True)
     hv = jnp.where(is_h[order], src_i[order], inf)[:cap_hedge]
@@ -155,30 +225,16 @@ def _tc_shard(
         jax.lax.pmax((n_h_local > cap_hedge).astype(jnp.int32), axis_name) > 0
     )
 
-    chunk = hedge_chunk or cap_hedge
-    n_chunks = -(-cap_hedge // chunk)
-    pad_h = n_chunks * chunk - cap_hedge
-    hv_p = jnp.concatenate([hv, jnp.full((pad_h,), inf, hv.dtype)])
-    hw_p = jnp.concatenate([hw, jnp.full((pad_h,), inf, hw.dtype)])
-
-    def count_chunked(qv, qw, t0, o0):
-        """Intersect all (qv, qw) queries in ``chunk``-sized pieces."""
-        def body(c, carry):
-            t, o = carry
-            sl_v = jax.lax.dynamic_slice(qv, (c * chunk,), (chunk,))
-            sl_w = jax.lax.dynamic_slice(qw, (c * chunk,), (chunk,))
-            dt, do = _intersect_block(Rv, Rx, sl_v, sl_w, d_pad=d_pad, n=n)
-            return t + dt, o | do
-        return jax.lax.fori_loop(0, qv.shape[0] // chunk, body, (t0, o0))
-
     # fori_loop carries must be device-varying from the start (shard_map vma)
     t0 = pvary(jnp.int32(0), (axis_name,))
     o0 = pvary(jnp.bool_(False), (axis_name,))
     if mode == "allgather":
         # one collective, volume k·m·p — identical to the paper's p rounds
-        all_hv = jax.lax.all_gather(hv_p, axis_name).reshape(-1)
-        all_hw = jax.lax.all_gather(hw_p, axis_name).reshape(-1)
-        t_i, d_ovf = count_chunked(all_hv, all_hw, t0, o0)
+        all_hv = jax.lax.all_gather(hv, axis_name).reshape(-1)
+        all_hw = jax.lax.all_gather(hw, axis_name).reshape(-1)
+        eng = run_plan(adj, all_hv, all_hw, hplan)
+        t_i = t0 + eng.c1
+        d_ovf = o0 | eng.overflow
     elif mode == "ring":
         # p ppermute rounds: O(cap_hedge) memory, intersection of round r
         # overlaps with the transfer of round r+1 (the paper's lines 36-42)
@@ -186,13 +242,13 @@ def _tc_shard(
 
         def round_body(r, carry):
             t, o, cv, cw = carry
-            t, o = count_chunked(cv, cw, t, o)
+            eng = run_plan(adj, cv, cw, hplan)
             cv = jax.lax.ppermute(cv, axis_name, perm)
             cw = jax.lax.ppermute(cw, axis_name, perm)
-            return t, o, cv, cw
+            return t + eng.c1, o | eng.overflow, cv, cw
 
         t_i, d_ovf, _, _ = jax.lax.fori_loop(
-            0, p, round_body, (t0, o0, hv_p, hw_p)
+            0, p, round_body, (t0, o0, hv, hw)
         )
     else:
         raise ValueError(mode)
@@ -227,16 +283,38 @@ def build_tc_shard_fn(
     mode: str = "allgather",
     hedge_chunk: int | None = None,
     frontier_dtype: str = "int32",
+    hplan: IntersectPlan | None = None,
+    intersect_backend: str = "jnp",
+    interpret: bool = True,
 ):
     """Shard function + static capacities for a graph of (n, 2m) size —
-    usable for dry-run lowering with ShapeDtypeStructs (no graph data)."""
-    cap_edges = max(1, math.ceil(m2 / p * 2))
-    cap_chunk = max(4, math.ceil(slack * m2 / (p * p)))
-    cap_hedge = cap_edges // 2 + 1
+    usable for dry-run lowering with ShapeDtypeStructs (no graph data).
+
+    ``hplan`` is the horizontal-round intersection plan; ``None`` builds
+    the degenerate single-bucket-at-``d_pad`` plan, which needs no graph
+    data and is always safe (``parallel_triangle_count`` passes the
+    degree-bucketed plan from ``plan_hedge_rounds`` instead).
+    """
+    cap_edges, cap_chunk, cap_hedge = _capacities(m2, p, slack)
+    rows, chunk = _hedge_layout(m2, p, mode, hedge_chunk)
+    if hplan is None:
+        hplan = plan_buckets_bounded(
+            rows, d_pad=d_pad, exceed=None, row_mult=chunk,
+            backend=intersect_backend, interpret=interpret,
+            query_chunk=chunk,
+        )
+    elif hplan.buckets and hplan.total_rows < rows:
+        # run_plan probes only plan.total_rows rows — an undersized plan
+        # (e.g. built for ring, used for allgather) would silently skip
+        # horizontal edges instead of flagging anything
+        raise ValueError(
+            f"hplan covers {hplan.total_rows} rows but mode={mode!r} "
+            f"probes {rows}-row blocks (plan_hedge_rounds mode mismatch?)"
+        )
     fn = functools.partial(
         _tc_shard, n=n, p=p, root=root, cap_chunk=cap_chunk,
-        cap_hedge=cap_hedge, d_pad=d_pad, axis_name=axis_name, mode=mode,
-        hedge_chunk=hedge_chunk, frontier_dtype=frontier_dtype,
+        cap_hedge=cap_hedge, hplan=hplan, axis_name=axis_name, mode=mode,
+        frontier_dtype=frontier_dtype,
     )
     return fn, cap_edges
 
@@ -251,20 +329,31 @@ def parallel_triangle_count(
     d_pad: int | None = None,
     mode: str = "allgather",
     hedge_chunk: int | None = None,
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    intersect_backend: str = "auto",
+    interpret: bool | None = None,
 ) -> ParallelTCResult:
     """Count triangles of ``g`` on every device of ``mesh``'s ``axis_name``
-    axis (the paper's p processors)."""
+    axis (the paper's p processors), probing through the shared
+    intersection engine (``intersect_backend`` as in ``triangle_count``)."""
+    backend, interpret = resolve_backend(intersect_backend, interpret)
     p = mesh.shape[axis_name]
     m2 = int(jax.device_get(g.n_edges_dir))
     if d_pad is None:
-        from repro.graph.csr import max_degree
-
         d_pad = max(1, max_degree(g))
-    fn, cap_edges = build_tc_shard_fn(
-        n=g.n_nodes, m2=m2, p=p, axis_name=axis_name, root=root, slack=slack,
-        d_pad=d_pad, mode=mode, hedge_chunk=hedge_chunk,
-    )
+    # shard once: the same host-side pass feeds the shard_map inputs AND
+    # the ring plan's per-shard degree bounds
+    cap_edges = _capacities(m2, p, slack)[0]
     s_sh, d_sh, _, _ = shard_edges(g, p, capacity=cap_edges)
+    hplan = plan_hedge_rounds(
+        g, p, mode=mode, hedge_chunk=hedge_chunk, d_pad=d_pad,
+        bucket_widths=bucket_widths, intersect_backend=backend,
+        interpret=interpret, shards=(s_sh, d_sh),
+    )
+    fn, _ = build_tc_shard_fn(
+        n=g.n_nodes, m2=m2, p=p, axis_name=axis_name, root=root, slack=slack,
+        d_pad=d_pad, mode=mode, hedge_chunk=hedge_chunk, hplan=hplan,
+    )
     shard = shard_map(
         fn,
         mesh=mesh,

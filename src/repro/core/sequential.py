@@ -9,15 +9,19 @@
 
 Two execution strategies (DESIGN.md §2):
 
-* ``triangle_count`` / ``find_triangles`` — the production pipeline.
+* ``triangle_count`` / ``find_triangles`` — the production pipeline,
+  running on the shared intersection engine (``core/intersect.py``).
   A jitted *plan* pass (BFS + horizontal marking + one stable argsort)
   compacts the k·m horizontal queries to the front sorted by
-  small-endpoint degree; the host then slices them into 2–3 contiguous
-  degree buckets and probes each bucket at its own padded width through
-  a jitted, backend-dispatched (``jnp`` | ``pallas``) intersection, so
-  probe work scales with k·m × bucket width instead of
-  2m × global-max-degree.  Bucket shapes are rounded up so repeated
-  calls on same-sized graphs hit the jit cache.
+  small-endpoint degree; the host then lays them out as an exact
+  ``IntersectPlan`` (``plan_buckets``) of 2–3 contiguous degree buckets
+  and executes it in one jit (``run_plan_jit``), each bucket probing at
+  its own padded width through the backend-dispatched
+  (``jnp`` | ``pallas``) engine, so probe work scales with
+  k·m × bucket width instead of 2m × global-max-degree.  Bucket shapes
+  are rounded up so repeated calls on same-sized graphs hit the jit
+  cache.  Algorithm 2 (``core/parallel_tc.py``) executes the same
+  engine against its transposed pair lists.
 
 * ``triangle_count_dense`` / ``find_triangles_dense`` — the seed
   single-jit reference: every directed edge slot probed at the global
@@ -37,14 +41,15 @@ import numpy as np
 from repro.core.bfs import bfs_levels
 from repro.core.edges import horizontal_mask, horizontal_queries, k_fraction
 from repro.core.intersect import (
-    count_common_neighbors,
+    DEFAULT_BUCKET_WIDTHS,
+    CsrAdjacency,
+    plan_buckets,
     probe_block,
     probe_common_neighbors,
     resolve_backend,
+    run_plan_jit,
 )
 from repro.graph.csr import Graph, max_degree, undirected_edges
-
-DEFAULT_BUCKET_WIDTHS = (32, 256)
 
 
 @jax.tree_util.register_dataclass
@@ -72,48 +77,6 @@ def _plan(g: Graph, root: int):
     return level, qu, qw, d_small, d_large, n_h, k
 
 
-def _ceil_to(x: int, mult: int) -> int:
-    return max(mult, -(-x // mult) * mult)
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (x - 1).bit_length())
-
-
-def _plan_buckets(ds_h, dl_h, bucket_widths, d_cap):
-    """Host-side bucket plan over the compacted query block.
-
-    ``ds_h``/``dl_h`` are the small/large endpoint degrees of the real
-    horizontal queries, ascending in ``ds_h``.  Returns
-    ``[(start, count, d_cand, d_targ)]`` with contiguous
-    ``[start, start + count)`` ranges covering all queries; ``d_cand`` is
-    the bucket's candidate width (clamped to ``d_cap`` if given),
-    ``d_targ`` the widest larger-endpoint list in the bucket (Pallas
-    gather width and binary-search depth).
-    """
-    H = int(ds_h.shape[0])
-    if H == 0:
-        return []
-    # widths are rounded (pow2 top, 128-aligned d_targ) so same-scale
-    # graphs with different degree profiles share jit cache entries —
-    # the static shapes are the rounded values, never raw degrees
-    top = _next_pow2(max(int(ds_h[-1]), 1))
-    if d_cap is not None:
-        top = min(top, int(d_cap))  # lossy cap on candidate width (see
-        # triangle_count's d_max doc; membership tests stay exact)
-    widths = sorted(w for w in {int(w) for w in bucket_widths} if 0 < w < top)
-    widths.append(top)
-    plan, start = [], 0
-    for w in widths:
-        end = int(np.searchsorted(ds_h, w, side="right")) if w < top else H
-        if end <= start:
-            continue
-        d_targ = _ceil_to(int(dl_h[start:end].max()), 128)
-        plan.append((start, end - start, w, d_targ))
-        start = end
-    return plan
-
-
 def _slice_pad(
     x: jnp.ndarray, start: int, count: int, rows: int, fill: int
 ) -> jnp.ndarray:
@@ -127,29 +90,31 @@ def _slice_pad(
     return part
 
 
-def _prepare_pipeline(g, root, cap_h, bucket_widths, d_max, row_mult):
+def _prepare_pipeline(
+    g, root, cap_h, bucket_widths, d_max, row_mult, backend, interpret,
+    query_chunk,
+):
     """Shared host orchestration for counting and finding: run the plan
-    pass, pull the degree profile to the host, lay out the buckets.
+    pass, pull the degree profile to the host, lay out the exact
+    ``IntersectPlan``.
 
-    Returns ``(level, n_h, k, h_overflow, blocks)`` where ``blocks`` is a
-    list of ``(qu_b, qw_b, rows, d_cand, d_targ)`` padded query slices
-    ready to probe."""
+    Returns ``(level, qu, qw, n_h, k, h_overflow, plan)`` — the
+    compacted query arrays plus the static engine plan covering their
+    first ``min(cap_h, k·m)`` rows."""
     level, qu, qw, ds, dl, n_h, k = _plan(g, root)
     H = int(jax.device_get(n_h))
     h_used = H if cap_h is None else min(int(cap_h), H)
-    ds_h = np.asarray(jax.device_get(ds[:h_used]))
-    dl_h = np.asarray(jax.device_get(dl[:h_used]))
-    blocks = []
-    for start, count, d_cand, d_targ in _plan_buckets(
-        ds_h, dl_h, bucket_widths, d_max
-    ):
-        rows = _ceil_to(count, row_mult)
-        blocks.append((
-            _slice_pad(qu, start, count, rows, g.n_nodes),
-            _slice_pad(qw, start, count, rows, g.n_nodes),
-            rows, d_cand, d_targ,
-        ))
-    return level, n_h, k, h_used < H, blocks
+    plan = plan_buckets(
+        np.asarray(jax.device_get(ds[:h_used])),
+        np.asarray(jax.device_get(dl[:h_used])),
+        bucket_widths=bucket_widths,
+        d_cap=d_max,
+        row_mult=row_mult,
+        backend=backend,
+        interpret=interpret,
+        query_chunk=query_chunk,
+    )
+    return level, qu, qw, n_h, k, h_used < H, plan
 
 
 def triangle_count(
@@ -192,35 +157,21 @@ def triangle_count(
         dm = d_max if d_max is not None else max(1, max_degree(g))
         return triangle_count_dense(g, d_max=dm, root=root)
     row_mult = int(query_chunk) if query_chunk else 64
-    level, n_h, k, h_overflow, blocks = _prepare_pipeline(
-        g, root, cap_h, bucket_widths, d_max, row_mult
+    level, qu, qw, n_h, k, h_overflow, plan = _prepare_pipeline(
+        g, root, cap_h, bucket_widths, d_max, row_mult, backend, interpret,
+        query_chunk,
     )
-    c1 = jnp.int32(0)
-    c2 = jnp.int32(0)
-    probe_rows = 0
-    probe_cells = 0
-    peak_rows = 0
-    for qu_b, qw_b, rows, d_cand, d_targ in blocks:
-        b1, b2 = count_common_neighbors(
-            g, qu_b, qw_b, level,
-            d_cand=d_cand, d_targ=d_targ, backend=backend,
-            interpret=interpret, query_chunk=query_chunk,
-        )
-        c1 = c1 + b1
-        c2 = c2 + b2
-        probe_rows += rows
-        probe_cells += rows * d_cand
-        peak_rows = max(peak_rows, min(rows, query_chunk or rows))
+    eng = run_plan_jit(CsrAdjacency.from_graph(g), qu, qw, plan, level)
     return TCResult(
-        triangles=c1 + c2 // 3,
-        c1=c1,
-        c2=c2,
+        triangles=eng.c1 + eng.c2 // 3,
+        c1=eng.c1,
+        c2=eng.c2,
         num_horizontal=n_h,
         k=k,
         levels=level,
-        probe_rows=jnp.asarray(probe_rows, jnp.int32),
-        probe_cells=jnp.asarray(float(probe_cells), jnp.float32),
-        peak_rows=jnp.asarray(peak_rows, jnp.int32),
+        probe_rows=jnp.asarray(plan.probe_rows, jnp.int32),
+        probe_cells=jnp.asarray(plan.probe_cells, jnp.float32),
+        peak_rows=jnp.asarray(plan.peak_rows, jnp.int32),
         h_overflow=jnp.asarray(h_overflow),
     )
 
@@ -339,8 +290,8 @@ def find_triangles(
         return find_triangles_dense(
             g, d_max=dm, max_triangles=max_triangles, root=root
         )
-    level, _, _, h_overflow, blocks = _prepare_pipeline(
-        g, root, cap_h, bucket_widths, d_max, 64
+    level, qu, qw, _, _, h_overflow, plan = _prepare_pipeline(
+        g, root, cap_h, bucket_widths, d_max, 64, backend, interpret, None
     )
     if h_overflow:
         warnings.warn(
@@ -351,10 +302,12 @@ def find_triangles(
     out = np.full((max_triangles, 3), -1, np.int32)
     off = 0
     total = 0
-    for qu_b, qw_b, rows, d_cand, d_targ in blocks:
+    for b in plan.buckets:
+        qu_b = _slice_pad(qu, b.start, b.count, b.rows, g.n_nodes)
+        qw_b = _slice_pad(qw, b.start, b.count, b.rows, g.n_nodes)
         tri_b, cnt_b = _find_block(
             g, qu_b, qw_b, level,
-            d_cand=d_cand, d_targ=d_targ, backend=backend,
+            d_cand=b.d_cand, d_targ=b.d_targ, backend=backend,
             interpret=interpret, max_triangles=max_triangles,
         )
         c = int(jax.device_get(cnt_b))

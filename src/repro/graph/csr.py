@@ -120,6 +120,27 @@ def undirected_edges(g: Graph) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     return u, w, keep
 
 
+def gather_rows(
+    flat: jnp.ndarray, starts: jnp.ndarray, lens: jnp.ndarray,
+    *, width: int, pad: int
+) -> jnp.ndarray:
+    """Dense ``int32[len(starts), width]`` view of the variable-length
+    slices ``flat[starts[i] : starts[i] + lens[i]]``, ``pad``-filled past
+    each slice's length.
+
+    The flat-array-plus-bounds form is the common denominator of every
+    adjacency source in the repo — CSR ``(dst, row_offsets, deg)`` and the
+    lex-sorted pair lists Algorithm 2 receives from its transpose — so the
+    intersection engine's dense gathers all route through here.
+    """
+    if flat.shape[0] == 0:
+        return jnp.full((starts.shape[0], width), pad, jnp.int32)
+    pos = jnp.arange(width, dtype=jnp.int32)
+    idx = jnp.clip(starts[:, None] + pos[None, :], 0, flat.shape[0] - 1)
+    ok = pos[None, :] < lens[:, None]
+    return jnp.where(ok, flat[idx], pad)
+
+
 def gather_neighbors(
     g: Graph, v: jnp.ndarray, *, width: int, pad: int
 ) -> jnp.ndarray:
@@ -127,7 +148,7 @@ def gather_neighbors(
 
     Rows of sentinel vertices (``v == n``) and slots past each vertex's
     degree are filled with ``pad``.  Shared by the Pallas intersect
-    front-end (ops.py) and the bucketed probe pipeline (core/intersect.py)
+    front-end (ops.py) and the intersection engine (core/intersect.py)
     so every consumer gathers candidate lists the same way — neighbor
     order is CSR order, i.e. sorted ascending.
     """
@@ -135,11 +156,8 @@ def gather_neighbors(
     deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
     vc = jnp.clip(v, 0, n)
     starts = g.row_offsets[vc]
-    dv = deg_ext[vc]
-    pos = jnp.arange(width, dtype=jnp.int32)
-    idx = jnp.clip(starts[:, None] + pos[None, :], 0, g.num_slots - 1)
-    ok = (pos[None, :] < dv[:, None]) & (v < n)[:, None]
-    return jnp.where(ok, g.dst[idx], pad)
+    lens = jnp.where(v < n, deg_ext[vc], 0)
+    return gather_rows(g.dst, starts, lens, width=width, pad=pad)
 
 
 def bounded_binary_search(

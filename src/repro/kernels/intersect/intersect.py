@@ -121,6 +121,70 @@ def intersect_pallas(
     return c1[:q], c2[:q]
 
 
+def _count_kernel(cand_ref, targ_ref, cnt_ref):
+    i1 = pl.program_id(1)
+    i2 = pl.program_id(2)
+
+    @pl.when((i1 == 0) & (i2 == 0))
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cand = cand_ref[...]
+    targ = targ_ref[...]
+    c_lo, c_hi = jnp.min(cand), jnp.max(cand)
+    t_lo, t_hi = jnp.min(targ), jnp.max(targ)
+    overlap = (c_hi >= 0) & (t_hi >= 0) & (c_lo <= t_hi) & (t_lo <= c_hi)
+
+    @pl.when(overlap)
+    def _work():
+        eq = cand[:, :, None] == targ[:, None, :]
+        hit = jnp.any(eq, axis=2) & (cand >= 0)
+        cnt_ref[...] += jnp.sum(hit, axis=1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_d", "interpret")
+)
+def intersect_pallas_count(
+    cand: jnp.ndarray,
+    targ: jnp.ndarray,
+    *,
+    block_q: int = 32,
+    block_d: int = 128,
+    interpret: bool | None = None,
+):
+    """Planned count form: ``int32[Q]`` — |cand row ∩ targ row| with no
+    level split and no per-candidate mask materialized.  This is
+    Algorithm 2's unit of work (after N-hat dedup every hit counts
+    exactly once), executed through the same tiling/early-out as
+    ``intersect_pallas``; the per-query counter tile is revisited across
+    both width grid dims and accumulated in place.  Each row's entries
+    must be unique (adjacency lists / transposed sublists are), so a
+    candidate is counted in at most one target tile.
+    """
+    interpret = _resolve_interpret(interpret)
+    q, dc = cand.shape
+    dt = targ.shape[1]
+    qp = -(-q // block_q) * block_q
+    dcp = -(-dc // block_d) * block_d
+    dtp = -(-dt // block_d) * block_d
+    cand = jnp.pad(cand, ((0, qp - q), (0, dcp - dc)), constant_values=CAND_PAD)
+    targ = jnp.pad(targ, ((0, qp - q), (0, dtp - dt)), constant_values=TARG_PAD)
+    grid = (qp // block_q, dcp // block_d, dtp // block_d)
+    cnt = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i1)),
+            pl.BlockSpec((block_q, block_d), lambda iq, i1, i2: (iq, i2)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda iq, i1, i2: (iq,)),
+        out_shape=jax.ShapeDtypeStruct((qp,), jnp.int32),
+        interpret=interpret,
+    )(cand, targ)
+    return cnt[:q]
+
+
 def _hits_kernel(cand_ref, targ_ref, hit_ref):
     i2 = pl.program_id(2)
 

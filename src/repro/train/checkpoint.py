@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing.
 
-Design (DESIGN.md §6):
+Design:
   * **atomic**: write to ``step_XXXX.tmp`` -> fsync -> rename; a crash
     mid-write can never corrupt the latest checkpoint;
   * **manifest**: step, config digest, data-stream cursor, mesh shape —
