@@ -13,6 +13,10 @@ no argument runs everything.
               allgather vs ring wall time, per-round estimate, planned
               bucket occupancy, wedge-baseline agreement; writes
               ``results/BENCH_parallel.json``
+  serve    -> batched triangle-analytics serving vs the sequential
+              one-graph-per-call loop on a mixed request stream:
+              throughput vs batch size, p50/p99 latency, plan-cache and
+              jit-cache behavior; writes ``results/BENCH_serve.json``
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -104,6 +108,18 @@ def bench_parallel():
         print(f"parallel_json,0,written={json_out}")
 
 
+def bench_serve():
+    """Serving-layer trajectory: the batched pipeline (one fused jit per
+    batch, cached bounded plans) vs the sequential per-graph loop on the
+    same mixed request stream — the acceptance claim is graphs/sec at
+    B >= 8 over the sequential baseline.  Writes
+    ``results/BENCH_serve.json``."""
+    from repro.launch.serve_tc import measure_serve
+
+    out = os.path.join(_ROOT, "results", "BENCH_serve.json")
+    measure_serve(num_requests=96, batch_sizes=(1, 2, 8, 16), out=out)
+
+
 def bench_roofline():
     from benchmarks.roofline import RESULTS, analyze
 
@@ -126,6 +142,7 @@ BENCHES = {
     "k_frac": bench_k_fraction,
     "tc": bench_tc,
     "parallel": bench_parallel,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 

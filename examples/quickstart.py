@@ -5,9 +5,13 @@
 import networkx as nx
 import numpy as np
 
-from repro.core.sequential import find_triangles, triangle_count
+from repro.core.sequential import (
+    find_triangles,
+    triangle_count,
+    triangle_count_batch,
+)
 from repro.graph import generators as gen
-from repro.graph.csr import from_edges, max_degree
+from repro.graph.csr import from_edges, from_edges_batch, max_degree
 
 
 def main():
@@ -34,6 +38,16 @@ def main():
     tri, cnt = find_triangles(g, d_max=max_degree(g), max_triangles=64)
     print(f"\nfirst 5 of {int(cnt)} karate triangles: "
           f"{np.asarray(tri)[:5].tolist()}")
+    # BATCHED counting: many small query graphs in one call (one shared
+    # static budget, one plan, one vmapped program — see DESIGN.md §4)
+    batch = [gen.karate(), gen.complete(9),
+             gen.erdos_renyi(60, 0.1, seed=1)]
+    gb = from_edges_batch(batch)
+    res = triangle_count_batch(gb)
+    print(f"\nGraphBatch of {gb.batch_size} on budget {gb.budget}:")
+    for i in range(gb.batch_size):
+        print(f"  lane {i}: n={int(gb.n_nodes[i])} "
+              f"triangles={int(res.triangles[i])} k={float(res.k[i]):.3f}")
 
 
 if __name__ == "__main__":

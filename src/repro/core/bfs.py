@@ -15,10 +15,49 @@ per level in the sharded path).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 UNVISITED = jnp.int32(2**30)
+
+
+def bfs_levels_batch(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    n_nodes: int,
+    root: int = 0,
+    *,
+    frontier_dtype: str = "int32",
+    row_offsets: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Per-lane BFS levels for batched edge arrays ``int32[B, num_slots]``.
+
+    The batched pipeline's mapping choice is **vmap** (DESIGN.md §4): each
+    lane of a ``GraphBatch`` is a complete budget-padded graph, so the
+    single-graph frontier sweep vectorizes lane-wise with no cross-lane
+    index arithmetic — jax's ``while_loop`` batching rule keeps iterating
+    until every lane's frontier is exhausted while freezing the finished
+    lanes, so the per-lane fixpoints are bit-identical to B single-graph
+    runs.  Pass the batch's ``row_offsets`` (``int32[B, n_nodes + 2]``,
+    e.g. ``gb.row_offsets``) to get the scatter-free CSR sweep per lane —
+    what the production batch pipeline does.  Returns ``int32[B, n_nodes]``.
+    """
+    if row_offsets is None:
+        fn = functools.partial(
+            bfs_levels, n_nodes=n_nodes, root=root,
+            frontier_dtype=frontier_dtype,
+        )
+        return jax.vmap(fn)(src, dst)
+
+    def lane(s, d, ro):
+        return bfs_levels(
+            s, d, n_nodes, root=root, frontier_dtype=frontier_dtype,
+            row_offsets=ro,
+        )
+
+    return jax.vmap(lane)(src, dst, row_offsets)
 
 
 def bfs_levels(
@@ -29,6 +68,7 @@ def bfs_levels(
     *,
     axis_name: str | None = None,
     frontier_dtype: str = "int32",
+    row_offsets: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Level of every vertex. ``src``/``dst`` may be sentinel-padded
     (entries == n_nodes are ignored). If ``axis_name`` is given the edge
@@ -37,34 +77,62 @@ def bfs_levels(
     ``frontier_dtype``: wire dtype of the per-level reachability exchange.
     int32 is the naive baseline; "uint8" moves 4x fewer bytes per level
     (the frontier is 0/1 so max == or) — §Perf knob for the TC cell.
+
+    ``row_offsets``: optional CSR offsets of the (whole, symmetrized)
+    edge list.  When given — the single-device / batched-lane case —
+    each sweep reads the frontier with a cumsum difference over the
+    sorted CSR slices (the frontier is 0/1, so segment-ANY is a
+    prefix-sum range test) instead of a per-edge ``segment_max``
+    scatter, which XLA:CPU executes element-serially.  Levels are
+    bit-identical either way; the sharded path keeps the scatter (a
+    shard's slice structure is not the graph's CSR).
     """
     src_c = jnp.clip(src, 0, n_nodes)  # sentinel slot n_nodes
     dst_c = jnp.clip(dst, 0, n_nodes)
+    use_csr = row_offsets is not None and axis_name is None
     # Seed every edge-less vertex up front at level 0.  The reseed rule
     # below revives dead frontiers ONE vertex per iteration — on RMAT
     # graphs (hundreds of isolated vertices) that is hundreds of extra
     # O(m) segment_max sweeps.  A vertex with no incident edges can take
     # any level without affecting horizontal marking, so bulk-seeding is
     # exact and leaves the one-at-a-time path only for real components.
-    has_edge = jax.ops.segment_max(
-        jnp.ones_like(dst_c), dst_c, num_segments=n_nodes + 1
-    )[:n_nodes]
-    if axis_name is not None:
-        has_edge = jax.lax.pmax(has_edge, axis_name)
+    if use_csr:
+        has_edge = row_offsets[1:n_nodes + 1] - row_offsets[:n_nodes]
+    else:
+        has_edge = jax.ops.segment_max(
+            jnp.ones_like(dst_c), dst_c, num_segments=n_nodes + 1
+        )[:n_nodes]
+        if axis_name is not None:
+            has_edge = jax.lax.pmax(has_edge, axis_name)
     level0 = jnp.where(has_edge > 0, UNVISITED, 0).astype(jnp.int32)
     level0 = level0.at[root].set(0)
 
-    def body(state):
-        level, cur, _ = state
+    def _reached(level, cur):
         lev_ext = jnp.concatenate([level, jnp.full((1,), UNVISITED, jnp.int32)])
+        if use_csr:
+            # symmetric graph: v is reached iff any neighbor in v's OWN
+            # sorted CSR slice sits on the frontier — a 0/1 predicate,
+            # so "any over a contiguous slice" is one exclusive cumsum
+            # plus a per-vertex range difference (no scatter)
+            active = (lev_ext[dst_c] == cur).astype(jnp.int32)
+            csum = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(active)]
+            )
+            return csum[row_offsets[1:n_nodes + 1]] - csum[
+                row_offsets[:n_nodes]]
         active = (lev_ext[src_c] == cur).astype(jnp.int32)
-        reached = jax.ops.segment_max(active, dst_c, num_segments=n_nodes + 1)[
-            :n_nodes
-        ]
+        reached = jax.ops.segment_max(
+            active, dst_c, num_segments=n_nodes + 1
+        )[:n_nodes]
         if axis_name is not None:
             reached = jax.lax.pmax(
                 reached.astype(jnp.dtype(frontier_dtype)), axis_name
             ).astype(jnp.int32)
+        return reached
+
+    def body(state):
+        level, cur, _ = state
+        reached = _reached(level, cur)
         unvisited = level == UNVISITED
         newly = unvisited & (reached > 0)
         any_new = jnp.any(newly)

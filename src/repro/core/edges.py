@@ -24,7 +24,7 @@ def horizontal_mask(
     return valid & (ls == ld) & (ls != UNVISITED)
 
 
-def horizontal_queries(g, level):
+def horizontal_queries(g, level, *, order: str = "asc"):
     """Compact + degree-sort the horizontal undirected query edges.
 
     The counting algorithm only ever intersects horizontal undirected
@@ -35,9 +35,17 @@ def horizontal_queries(g, level):
     and the degree-bucket layout (each bucket is then a contiguous row
     range; see DESIGN.md §2).
 
+    ``order`` picks the layout direction: ``"asc"`` (small degrees
+    first — the historical single-graph layout) or ``"desc"`` (large
+    degrees first — the batched layout: lanes of a ``GraphBatch`` align
+    at row 0, and a per-row *max* over descending lane profiles is still
+    descending, which is what lets one shared ``IntersectPlan`` cover
+    every lane exactly; DESIGN.md §4).  This function is shape-polymorphic
+    and vmaps over a ``GraphBatch.lane_view()`` unchanged.
+
     Returns ``(qu, qw, d_small, d_large, n_h)``: int32[num_slots] arrays
     whose first ``n_h`` rows are the horizontal queries (``qu < qw``)
-    sorted by ``d_small`` ascending; trailing rows are sentinel (``n``)
+    sorted by ``d_small`` in ``order``; trailing rows are sentinel (``n``)
     with ``d_small == d_large == 0``.
     """
     from repro.graph.csr import undirected_edges
@@ -49,13 +57,19 @@ def horizontal_queries(g, level):
     deg_ext = jnp.concatenate([g.deg, jnp.zeros((1,), jnp.int32)])
     du = deg_ext[jnp.clip(eu, 0, n)]
     dw = deg_ext[jnp.clip(ew, 0, n)]
-    big = jnp.int32(g.num_slots + 1)  # > any degree
-    key = jnp.where(use, jnp.minimum(du, dw), big)
-    order = jnp.argsort(key, stable=True)
-    qu = jnp.where(use, eu, n)[order]
-    qw = jnp.where(use, ew, n)[order]
-    d_small = jnp.where(use, jnp.minimum(du, dw), 0)[order]
-    d_large = jnp.where(use, jnp.maximum(du, dw), 0)[order]
+    if order == "asc":
+        big = jnp.int32(g.num_slots + 1)  # > any degree
+        key = jnp.where(use, jnp.minimum(du, dw), big)
+    elif order == "desc":
+        # real queries have min-degree >= 1, so -1 ranks padding last
+        key = -jnp.where(use, jnp.minimum(du, dw), -1)
+    else:
+        raise ValueError(f"order must be 'asc' or 'desc'; got {order!r}")
+    sort = jnp.argsort(key, stable=True)
+    qu = jnp.where(use, eu, n)[sort]
+    qw = jnp.where(use, ew, n)[sort]
+    d_small = jnp.where(use, jnp.minimum(du, dw), 0)[sort]
+    d_large = jnp.where(use, jnp.maximum(du, dw), 0)[sort]
     n_h = jnp.sum(use, dtype=jnp.int32)
     return qu, qw, d_small, d_large, n_h
 

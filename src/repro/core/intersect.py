@@ -45,6 +45,8 @@ import numpy as np
 
 from repro.graph.csr import (
     Graph,
+    _ceil_to,
+    _next_pow2,
     bounded_binary_search,
     gather_rows,
 )
@@ -176,14 +178,6 @@ class IntersectPlan:
         )
 
 
-def _ceil_to(x: int, mult: int) -> int:
-    return max(mult, -(-x // mult) * mult)
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (x - 1).bit_length())
-
-
 def plan_buckets(
     ds_h,
     dl_h,
@@ -194,47 +188,62 @@ def plan_buckets(
     backend: str = "jnp",
     interpret: bool = True,
     query_chunk: int | None = None,
+    layout: str = "asc",
 ) -> IntersectPlan:
     """Exact host-side plan from a known per-query degree profile.
 
     ``ds_h``/``dl_h`` are the small/large endpoint degrees of the real
-    queries, already sorted ascending in ``ds_h`` (the layout
-    ``horizontal_queries`` produces).  Buckets are contiguous
-    ``searchsorted`` ranges; ``d_cand`` is the bucket's width boundary
-    (clamped to ``d_cap`` if given — a lossy candidate-list cap, see
+    queries, sorted by ``ds_h`` in the direction named by ``layout`` —
+    ``"asc"`` (``horizontal_queries`` order="asc") or ``"desc"`` (the
+    batched layout; the profile may then be a per-row *max* over the
+    lanes of a batch, which preserves descending order, so one plan
+    covers every lane exactly).  Buckets are contiguous ``searchsorted``
+    ranges; ``d_cand`` is the bucket's width boundary (clamped to
+    ``d_cap`` if given — a lossy candidate-list cap, see
     ``triangle_count``), ``d_targ`` the widest larger-endpoint list in
     the bucket, 128-aligned.  Widths are rounded (pow2 top, 128-aligned
     ``d_targ``, ``row_mult``-padded rows) so same-scale graphs with
     different degree profiles share jit cache entries.
     """
+    if layout not in ("asc", "desc"):
+        raise ValueError(f"layout must be 'asc' or 'desc'; got {layout!r}")
     ds_h = np.asarray(ds_h)
     dl_h = np.asarray(dl_h)
     H = int(ds_h.shape[0])
     buckets = []
     if H:
-        top = _next_pow2(max(int(ds_h[-1]), 1))
+        d_top = int(ds_h[-1] if layout == "asc" else ds_h[0])
+        top = _next_pow2(max(d_top, 1))
         if d_cap is not None:
             top = min(top, int(d_cap))
         widths = sorted(
             w for w in {int(w) for w in bucket_widths} if 0 < w < top
         )
         widths.append(top)
-        start = 0
-        for w in widths:
-            end = (
-                int(np.searchsorted(ds_h, w, side="right")) if w < top else H
-            )
-            if end <= start:
+        if layout == "asc":
+            bounds = [
+                int(np.searchsorted(ds_h, w, side="right")) for w in widths[:-1]
+            ] + [H]
+        else:
+            # rows with d_small > w form a prefix of the descending block
+            asc = ds_h[::-1]
+            bounds = [
+                H - int(np.searchsorted(asc, w, side="right"))
+                for w in widths[:-1]
+            ] + [0]
+        start = H if layout == "desc" else 0
+        for w, b in zip(widths, bounds):
+            lo, hi = (b, start) if layout == "desc" else (start, b)
+            start = b
+            if hi <= lo:
                 continue
-            count = end - start
             buckets.append(PlanBucket(
-                start=start,
-                count=count,
-                rows=_ceil_to(count, row_mult),
+                start=lo,
+                count=hi - lo,
+                rows=_ceil_to(hi - lo, row_mult),
                 d_cand=w,
-                d_targ=_ceil_to(int(dl_h[start:end].max()), 128),
+                d_targ=_ceil_to(int(dl_h[lo:hi].max()), 128),
             ))
-            start = end
     return IntersectPlan(
         buckets=tuple(buckets), backend=backend, interpret=interpret,
         query_chunk=query_chunk, sort_queries=False,
@@ -251,10 +260,19 @@ def plan_buckets_bounded(
     backend: str = "jnp",
     interpret: bool = True,
     query_chunk: int | None = None,
+    sort_queries: bool | None = None,
 ) -> IntersectPlan:
     """Safe static plan when the per-query degree profile is unknown at
     trace time — the shard_map case, where Algorithm 2's horizontal
-    rounds arrive as data-dependent gathers.
+    rounds arrive as data-dependent gathers, and the sync-free batched
+    serving path, where the bounds come from a ``BatchDegreeMeta``
+    degree histogram instead (``core.sequential.batch_plan_for``).
+
+    ``sort_queries=None`` (default) lets ``run_plan`` degree-sort each
+    block in-trace whenever the plan has more than one bucket; pass
+    ``False`` when the caller's query blocks are already laid out
+    descending by min-degree (``horizontal_queries(order="desc")``), so
+    the executor skips the second argsort.
 
     ``exceed`` is a tuple of ``(width, bound)`` pairs: for each candidate
     bucket width, an upper bound on how many queries of *any* block this
@@ -273,6 +291,8 @@ def plan_buckets_bounded(
     T = _ceil_to(int(total_rows), row_mult) if total_rows > 0 else 0
     if T == 0:
         return IntersectPlan((), backend, interpret, query_chunk, False)
+    if sort_queries is None:
+        sort_queries = True  # resolved to len(buckets) > 1 below
     top = int(d_pad)
     bound = dict(exceed or ())
     widths = sorted(
@@ -300,7 +320,8 @@ def plan_buckets_bounded(
         used += rows
     return IntersectPlan(
         buckets=tuple(buckets), backend=backend, interpret=interpret,
-        query_chunk=query_chunk, sort_queries=len(buckets) > 1,
+        query_chunk=query_chunk,
+        sort_queries=bool(sort_queries) and len(buckets) > 1,
     )
 
 
@@ -450,8 +471,13 @@ def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
     ``h_overflow``); a caller that wants full coverage must plan the full
     block.  Shapes depend only on ``(plan, len(qu))`` — never on the
     data — so the same call is valid under ``jit`` (pass the plan as a
-    static arg; see ``run_plan_jit``) and inside ``shard_map`` (close
-    over the plan).  With ``level``, hits are split into the paper's
+    static arg, as ``core.sequential``'s jitted wrappers do) and inside
+    ``shard_map`` (close over the plan) — and, because every op here has
+    a batching rule, the
+    same call is the batched executor too: ``core.sequential`` vmaps it
+    over a ``GraphBatch``'s lanes with the plan closed over, one shared
+    plan covering every lane (DESIGN.md §4).  With ``level``, hits are
+    split into the paper's
     (c1, c2) by apex level; without, every hit counts once (Algorithm 2's
     exactly-once semantics after N-hat dedup).
     """
@@ -514,14 +540,6 @@ def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
                 0, b.rows // chunk, body, (c1, c2, ovf)
             )
     return EngineCounts(c1, c2, ovf)
-
-
-@functools.partial(jax.jit, static_argnames=("plan",))
-def run_plan_jit(adj, qu, qw, plan: IntersectPlan, level=None) -> EngineCounts:
-    """``run_plan`` under one jit: the whole bucket loop compiles to a
-    single program keyed on ``(plan, shapes)`` — the host-caller form
-    (Algorithm 1); shard_map bodies call ``run_plan`` directly."""
-    return run_plan(adj, qu, qw, plan, level=level)
 
 
 # ------------------------------------------------- probe-level wrappers

@@ -7,21 +7,30 @@
        c2 += apexes on the same level         (counted thrice, Lemma 2)
     4. T = c1 + c2 / 3                        (Theorem 1)
 
-Two execution strategies (DESIGN.md §2):
+Since PR 3 the whole pipeline is **batched** (DESIGN.md §4): the unit of
+execution is a ``GraphBatch`` — B budget-padded graphs vmapped lane-wise
+through BFS → horizontal compaction (descending by small-endpoint
+degree) → the shared intersection engine (``core/intersect.py``), with
+ONE ``IntersectPlan`` covering every lane.  Two planning modes feed the
+same executor:
 
-* ``triangle_count`` / ``find_triangles`` — the production pipeline,
-  running on the shared intersection engine (``core/intersect.py``).
-  A jitted *plan* pass (BFS + horizontal marking + one stable argsort)
-  compacts the k·m horizontal queries to the front sorted by
-  small-endpoint degree; the host then lays them out as an exact
-  ``IntersectPlan`` (``plan_buckets``) of 2–3 contiguous degree buckets
-  and executes it in one jit (``run_plan_jit``), each bucket probing at
-  its own padded width through the backend-dispatched
-  (``jnp`` | ``pallas``) engine, so probe work scales with
-  k·m × bucket width instead of 2m × global-max-degree.  Bucket shapes
-  are rounded up so repeated calls on same-sized graphs hit the jit
-  cache.  Algorithm 2 (``core/parallel_tc.py``) executes the same
-  engine against its transposed pair lists.
+* **exact** (``triangle_count_batch`` default): a jitted plan pass
+  produces each lane's degree profile, the per-row max over lanes is
+  pulled to the host once (descending profiles stay descending under a
+  row-wise max — the reason for the desc layout), and ``plan_buckets``
+  lays out exact contiguous degree buckets;
+* **bounded** (``plan=batch_plan_for(gb)``): a sync-free plan from the
+  batch's quantized degree metadata (``BatchDegreeMeta``), memoized in a
+  host-side plan cache — the serving hot path (``launch/serve_tc.py``)
+  runs BFS + compaction + probing as a single fused jit per batch with
+  zero host round-trips.
+
+``triangle_count`` / ``find_triangles`` are thin B=1 wrappers over the
+same code path (``to_batch`` is an ``expand_dims``, not a repack), so
+the single-graph results — including ``probe_rows``/``probe_cells``
+work accounting — are bit-identical to the pre-batch pipeline.
+Algorithm 2 (``core/parallel_tc.py``) executes the same engine against
+its transposed pair lists.
 
 * ``triangle_count_dense`` / ``find_triangles_dense`` — the seed
   single-jit reference: every directed edge slot probed at the global
@@ -43,13 +52,21 @@ from repro.core.edges import horizontal_mask, horizontal_queries, k_fraction
 from repro.core.intersect import (
     DEFAULT_BUCKET_WIDTHS,
     CsrAdjacency,
+    IntersectPlan,
     plan_buckets,
+    plan_buckets_bounded,
     probe_block,
     probe_common_neighbors,
     resolve_backend,
-    run_plan_jit,
+    run_plan,
 )
-from repro.graph.csr import Graph, max_degree, undirected_edges
+from repro.graph.csr import (
+    Graph,
+    GraphBatch,
+    max_degree,
+    to_batch,
+    undirected_edges,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -65,16 +82,62 @@ class TCResult:
     probe_cells: jnp.ndarray  # float32 Σ rows × candidate width (a work
     #   metric — float so Graph500-scale products can't overflow int32)
     peak_rows: jnp.ndarray    # largest single probed block (peak-memory rows)
-    h_overflow: jnp.ndarray   # True iff cap_h dropped real horizontal queries
+    h_overflow: jnp.ndarray   # True iff real horizontal queries were dropped
+    #   (cap_h truncation, a foreign plan's short row coverage) or a
+    #   width clamp truncated candidate lists (d_max / a violated
+    #   bounded-plan bound) — any way a count can be less than exact
+
+
+def _lane_plan(g: Graph, *, root: int):
+    """Plan pass for ONE lane: BFS levels + desc-compacted, degree-sorted
+    horizontal queries + the paper's k.  Shape-polymorphic — the batched
+    pipeline vmaps it over ``GraphBatch.lane_view()``."""
+    level = bfs_levels(
+        g.src, g.dst, g.n_nodes, root=root, row_offsets=g.row_offsets
+    )
+    qu, qw, d_small, d_large, n_h = horizontal_queries(g, level, order="desc")
+    k = k_fraction(g.src, g.dst, level, g.n_nodes)
+    return level, qu, qw, d_small, d_large, n_h, k
 
 
 @functools.partial(jax.jit, static_argnames=("root",))
-def _plan(g: Graph, root: int):
-    """Plan pass: levels + compacted, degree-sorted horizontal queries."""
-    level = bfs_levels(g.src, g.dst, g.n_nodes, root=root)
-    qu, qw, d_small, d_large, n_h = horizontal_queries(g, level)
-    k = k_fraction(g.src, g.dst, level, g.n_nodes)
-    return level, qu, qw, d_small, d_large, n_h, k
+def _plan_batch(gview: Graph, root: int):
+    """Vmapped plan pass + on-device profile pooling.
+
+    The per-row max over descending lane profiles is itself descending,
+    so ``(ds_pool, dl_pool)`` is a single profile that upper-bounds every
+    lane row-wise — the host pulls just these two vectors (not B of
+    them) to lay out one exact shared plan."""
+    level, qu, qw, ds, dl, n_h, k = jax.vmap(
+        functools.partial(_lane_plan, root=root)
+    )(gview)
+    return level, qu, qw, jnp.max(ds, 0), jnp.max(dl, 0), n_h, k
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _run_batch(gview: Graph, qu, qw, level, plan: IntersectPlan):
+    """Stage 2 of the exact path: vmapped ``run_plan`` over the lanes
+    with the (static) shared plan closed over."""
+    def lane(g, u, w, lev):
+        return run_plan(CsrAdjacency.from_graph(g), u, w, plan, level=lev)
+
+    return jax.vmap(lane)(gview, qu, qw, level)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "root"))
+def _tc_batch_fused(gview: Graph, plan: IntersectPlan, root: int):
+    """The serving hot path: BFS + compaction + probing in ONE jit.
+
+    Valid only with a plan known before trace time (the bounded
+    plan-cache path) — no host sync anywhere in the batch."""
+    def lane(g):
+        # same plan pass as the exact path (_lane_plan) — one source of
+        # truth; the unused degree profile is dead-code-eliminated by XLA
+        level, qu, qw, _, _, n_h, k = _lane_plan(g, root=root)
+        eng = run_plan(CsrAdjacency.from_graph(g), qu, qw, plan, level=level)
+        return level, n_h, k, eng
+
+    return jax.vmap(lane)(gview)
 
 
 def _slice_pad(
@@ -90,31 +153,183 @@ def _slice_pad(
     return part
 
 
-def _prepare_pipeline(
-    g, root, cap_h, bucket_widths, d_max, row_mult, backend, interpret,
+def _exact_batch_plan(
+    gview, root, cap_h, bucket_widths, d_max, row_mult, backend, interpret,
     query_chunk,
 ):
-    """Shared host orchestration for counting and finding: run the plan
-    pass, pull the degree profile to the host, lay out the exact
-    ``IntersectPlan``.
+    """Shared host orchestration of the exact path (counting and
+    finding): run the vmapped plan pass, pull the pooled degree profile
+    to the host in one sync, lay out the shared ``IntersectPlan``.
 
-    Returns ``(level, qu, qw, n_h, k, h_overflow, plan)`` — the
-    compacted query arrays plus the static engine plan covering their
-    first ``min(cap_h, k·m)`` rows."""
-    level, qu, qw, ds, dl, n_h, k = _plan(g, root)
-    H = int(jax.device_get(n_h))
+    Returns ``(level, qu, qw, n_h, k, h_used, h_dropped, plan)`` — the
+    per-lane compacted query arrays plus the static plan covering their
+    first ``h_used = min(cap_h, max_lane_km)`` rows (``h_dropped`` is
+    True iff ``cap_h`` cut real queries in some lane)."""
+    level, qu, qw, ds_pool, dl_pool, n_h, k = _plan_batch(gview, root)
+    ds_h, dl_h, H = jax.device_get((ds_pool, dl_pool, jnp.max(n_h)))
+    H = int(H)
     h_used = H if cap_h is None else min(int(cap_h), H)
     plan = plan_buckets(
-        np.asarray(jax.device_get(ds[:h_used])),
-        np.asarray(jax.device_get(dl[:h_used])),
+        np.asarray(ds_h[:h_used]),
+        np.asarray(dl_h[:h_used]),
         bucket_widths=bucket_widths,
         d_cap=d_max,
         row_mult=row_mult,
         backend=backend,
         interpret=interpret,
         query_chunk=query_chunk,
+        layout="desc",
     )
-    return level, qu, qw, n_h, k, h_used < H, plan
+    return level, qu, qw, n_h, k, h_used, h_used < H, plan
+
+
+# ----------------------------------------------------- batch plan cache
+
+_BATCH_PLAN_CACHE: dict = {}
+_BATCH_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def batch_plan_for(
+    gb: GraphBatch,
+    *,
+    intersect_backend: str = "auto",
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    interpret: bool | None = None,
+    query_chunk: int | None = None,
+    row_mult: int = 64,
+) -> IntersectPlan:
+    """Sync-free bounded plan for a packed batch, memoized host-side.
+
+    The plan is laid out by ``plan_buckets_bounded`` from the batch's
+    quantized ``BatchDegreeMeta`` (true upper bounds on every lane's
+    horizontal-query degree profile, known at pack time — no BFS, no
+    device round-trip), so it is exact: no lane can overflow its bucket.
+    The cache key is ``(budget, meta, bucket_widths, backend, interpret,
+    query_chunk, row_mult)`` — metadata quantization (``META_ROW_QUANT``,
+    pow2 ``d_pad``) is what makes same-scale traffic collide onto the
+    same key, skip planning entirely, and share one fused jit entry.
+    ``batch_plan_cache_stats`` reports hit rates for the serving layer.
+    """
+    backend, interpret = resolve_backend(intersect_backend, interpret)
+    if gb.meta is None:
+        raise ValueError(
+            "GraphBatch carries no degree metadata; pack it with "
+            "from_edges_batch(with_meta=True) or plan exact "
+            "(triangle_count_batch(gb) without a plan)"
+        )
+    if query_chunk:
+        # bucket rows must be a chunk multiple for run_plan's fori slicing
+        row_mult = int(query_chunk)
+    key = (
+        gb.budget, gb.meta, tuple(int(w) for w in bucket_widths),
+        backend, interpret, query_chunk, int(row_mult),
+    )
+    plan = _BATCH_PLAN_CACHE.get(key)
+    if plan is None:
+        _BATCH_PLAN_STATS["misses"] += 1
+        plan = plan_buckets_bounded(
+            gb.meta.h_rows,
+            d_pad=gb.meta.d_pad,
+            exceed=gb.meta.exceed,
+            bucket_widths=tuple(int(w) for w in bucket_widths),
+            row_mult=int(row_mult),
+            backend=backend,
+            interpret=interpret,
+            query_chunk=query_chunk,
+            sort_queries=False,  # lanes arrive desc-sorted from compaction
+        )
+        _BATCH_PLAN_CACHE[key] = plan
+    else:
+        _BATCH_PLAN_STATS["hits"] += 1
+    return plan
+
+
+def batch_plan_cache_stats(reset: bool = False) -> dict:
+    """``{"hits", "misses", "size"}`` of the bounded-plan cache."""
+    out = dict(_BATCH_PLAN_STATS, size=len(_BATCH_PLAN_CACHE))
+    if reset:
+        _BATCH_PLAN_STATS.update(hits=0, misses=0)
+    return out
+
+
+def triangle_count_batch(
+    gb: GraphBatch,
+    *,
+    plan: IntersectPlan | None = None,
+    root: int = 0,
+    intersect_backend: str = "auto",
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    d_max: int | None = None,
+    cap_h: int | None = None,
+    query_chunk: int | None = None,
+    interpret: bool | None = None,
+) -> TCResult:
+    """Cover-edge triangle count of every lane of a ``GraphBatch``.
+
+    All ``TCResult`` array fields gain a leading batch axis (``levels``
+    is ``[B, n_budget]``); the plan-derived work accounting
+    (``probe_rows``/``probe_cells``/``peak_rows``) stays scalar — it is
+    per-lane by construction (every lane runs the same plan).  Lane
+    results are bit-identical to running ``triangle_count`` on each
+    graph alone (isolated budget-padding vertices change nothing).
+
+    Without ``plan``, the exact two-stage path runs: one jitted plan
+    pass, one small host sync for the pooled degree profile, one jitted
+    execution pass.  With ``plan`` (see ``batch_plan_for``), the whole
+    batch runs as a single fused jit with no host round-trip — the
+    serving hot path; the plan's own backend/interpret/chunk settings
+    apply, and ``d_max``/``cap_h`` must be left unset (coverage is the
+    plan's contract).  ``h_overflow[i]`` is True iff ``cap_h`` dropped
+    real queries of lane ``i`` or lane ``i`` overflowed a bucket width
+    (impossible under true-bound plans, flagged rather than miscounted
+    otherwise).
+    """
+    backend, interpret = resolve_backend(intersect_backend, interpret)
+    gview = gb.lane_view()
+    if plan is not None:
+        if d_max is not None or cap_h is not None:
+            raise ValueError(
+                "d_max/cap_h only apply to exact planning; a precomputed "
+                "plan fixes coverage and widths"
+            )
+        level, n_h, k, eng = _tc_batch_fused(gview, plan, root)
+        # coverage is the plan's contract: a lane with more horizontal
+        # queries than the plan probes must flag, not silently undercount
+        # (can't happen with a plan from THIS batch's true-bound meta,
+        # but the plan= parameter is public and plans get reused)
+        h_ovf = (n_h > plan.total_rows) | eng.overflow
+    else:
+        row_mult = int(query_chunk) if query_chunk else 64
+        level, qu, qw, n_h, k, h_used, _, plan = _exact_batch_plan(
+            gview, root, cap_h, bucket_widths, d_max, row_mult, backend,
+            interpret, query_chunk,
+        )
+        eng = _run_batch(gview, qu, qw, level, plan)
+        h_ovf = (n_h > h_used) | eng.overflow
+    return TCResult(
+        triangles=eng.c1 + eng.c2 // 3,
+        c1=eng.c1,
+        c2=eng.c2,
+        num_horizontal=n_h,
+        k=k,
+        levels=level,
+        probe_rows=jnp.asarray(plan.probe_rows, jnp.int32),
+        probe_cells=jnp.asarray(plan.probe_cells, jnp.float32),
+        peak_rows=jnp.asarray(plan.peak_rows, jnp.int32),
+        h_overflow=h_ovf,
+    )
+
+
+def _squeeze_lane(res: TCResult) -> TCResult:
+    """Drop the batch axis of a B=1 result (plan-derived scalars pass
+    through untouched)."""
+    return TCResult(
+        triangles=res.triangles[0], c1=res.c1[0], c2=res.c2[0],
+        num_horizontal=res.num_horizontal[0], k=res.k[0],
+        levels=res.levels[0], probe_rows=res.probe_rows,
+        probe_cells=res.probe_cells, peak_rows=res.peak_rows,
+        h_overflow=res.h_overflow[0],
+    )
 
 
 def triangle_count(
@@ -145,35 +360,35 @@ def triangle_count(
       bucket_widths: small-endpoint-degree bucket boundaries; queries with
         ``d_small <= w`` probe at width ``w``.
       cap_h: optional cap on the compacted query block (k·m rows when
-        ``None``).  Dropped queries set ``h_overflow``.
+        ``None``).  Dropped queries set ``h_overflow``.  NOTE: since the
+        batch refactor the block is sorted *descending* by
+        small-endpoint degree, so the retained ``cap_h`` rows are the
+        highest-degree (hub) queries and the dropped ones the cheap
+        tail — the opposite truncation set from the pre-batch ascending
+        layout, and the retained block buckets at hub widths.  Use
+        ``query_chunk`` to bound peak probe memory; ``cap_h`` only
+        bounds the row count.
       query_chunk: probe rows in fori-loop chunks of this size to bound
         peak memory (also the row-padding multiple; default 64).
       interpret: Pallas interpret override; ``None`` = auto from backend.
       compact: ``False`` falls back to the dense seed reference
         (``triangle_count_dense``; jnp only).
+
+    This is a thin B=1 wrapper over ``triangle_count_batch`` (the graph
+    rides the batched engine as a single lane; ``to_batch`` adds the
+    lane axis without repacking), so counts AND work accounting are
+    bit-identical to the batch path's lane results.
     """
     backend, interpret = resolve_backend(intersect_backend, interpret)
     if not compact:
         dm = d_max if d_max is not None else max(1, max_degree(g))
         return triangle_count_dense(g, d_max=dm, root=root)
-    row_mult = int(query_chunk) if query_chunk else 64
-    level, qu, qw, n_h, k, h_overflow, plan = _prepare_pipeline(
-        g, root, cap_h, bucket_widths, d_max, row_mult, backend, interpret,
-        query_chunk,
+    res = triangle_count_batch(
+        to_batch(g), root=root, intersect_backend=backend,
+        bucket_widths=bucket_widths, d_max=d_max, cap_h=cap_h,
+        query_chunk=query_chunk, interpret=interpret,
     )
-    eng = run_plan_jit(CsrAdjacency.from_graph(g), qu, qw, plan, level)
-    return TCResult(
-        triangles=eng.c1 + eng.c2 // 3,
-        c1=eng.c1,
-        c2=eng.c2,
-        num_horizontal=n_h,
-        k=k,
-        levels=level,
-        probe_rows=jnp.asarray(plan.probe_rows, jnp.int32),
-        probe_cells=jnp.asarray(plan.probe_cells, jnp.float32),
-        peak_rows=jnp.asarray(plan.peak_rows, jnp.int32),
-        h_overflow=jnp.asarray(h_overflow),
-    )
+    return _squeeze_lane(res)
 
 
 @functools.partial(jax.jit, static_argnames=("d_max", "root"))
@@ -290,26 +505,34 @@ def find_triangles(
         return find_triangles_dense(
             g, d_max=dm, max_triangles=max_triangles, root=root
         )
-    level, qu, qw, _, _, h_overflow, plan = _prepare_pipeline(
-        g, root, cap_h, bucket_widths, d_max, 64, backend, interpret, None
+    gview = to_batch(g).lane_view()
+    level, qu, qw, _, _, _, h_dropped, plan = _exact_batch_plan(
+        gview, root, cap_h, bucket_widths, d_max, 64, backend, interpret,
+        None,
     )
-    if h_overflow:
+    if h_dropped:
         warnings.warn(
             f"find_triangles: cap_h={cap_h} dropped horizontal queries — "
             "the returned triangle list is incomplete",
             stacklevel=2,
         )
-    out = np.full((max_triangles, 3), -1, np.int32)
-    off = 0
-    total = 0
+    level, qu, qw = level[0], qu[0], qw[0]
+    # dispatch EVERY bucket's jitted probe before the first fetch: the
+    # device works through the blocks back-to-back while the host copies
+    # results out, instead of stalling on a device_get per bucket
+    pending = []
     for b in plan.buckets:
         qu_b = _slice_pad(qu, b.start, b.count, b.rows, g.n_nodes)
         qw_b = _slice_pad(qw, b.start, b.count, b.rows, g.n_nodes)
-        tri_b, cnt_b = _find_block(
+        pending.append(_find_block(
             g, qu_b, qw_b, level,
             d_cand=b.d_cand, d_targ=b.d_targ, backend=backend,
             interpret=interpret, max_triangles=max_triangles,
-        )
+        ))
+    out = np.full((max_triangles, 3), -1, np.int32)
+    off = 0
+    total = 0
+    for tri_b, cnt_b in pending:
         c = int(jax.device_get(cnt_b))
         total += c
         take = min(c, max_triangles - off)

@@ -15,7 +15,8 @@ consumes only the jnp arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +64,34 @@ class Graph:
         return jnp.where(valid, nbrs, n), valid
 
 
+def _normalize_edges(edges: np.ndarray, n_nodes: int) -> tuple[np.ndarray, np.ndarray]:
+    """Shared host-side packing step: dedup, drop self-loops, symmetrize,
+    CSR-sort.  Returns ``(src, dst)`` int64 directed arrays of length 2m.
+
+    Handles the degenerate inputs the batched serving path must accept —
+    an empty edge array and/or ``n_nodes == 0`` (the empty-graph padding
+    lanes of a partial batch) — without tripping the ``// n_nodes``
+    packed-key arithmetic on a zero divisor.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0 or n_nodes <= 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    edges = edges.reshape(-1, 2)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    if edges.shape[0] == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    und = np.unique(lo * np.int64(n_nodes) + hi)
+    lo, hi = und // n_nodes, und % n_nodes
+    s = np.concatenate([lo, hi])
+    d = np.concatenate([hi, lo])
+    order = np.lexsort((d, s))
+    return s[order], d[order]
+
+
 def from_edges(
     edges: np.ndarray,
     n_nodes: int,
@@ -74,18 +103,7 @@ def from_edges(
     Deduplicates, drops self-loops, symmetrizes and CSR-sorts.  ``num_slots``
     pads the directed edge list to a fixed budget (>= 2m).
     """
-    edges = np.asarray(edges, dtype=np.int64)
-    if edges.size == 0:
-        edges = np.zeros((0, 2), dtype=np.int64)
-    edges = edges[edges[:, 0] != edges[:, 1]]
-    lo = np.minimum(edges[:, 0], edges[:, 1])
-    hi = np.maximum(edges[:, 0], edges[:, 1])
-    und = np.unique(lo * np.int64(n_nodes) + hi)
-    lo, hi = und // n_nodes, und % n_nodes
-    s = np.concatenate([lo, hi])
-    d = np.concatenate([hi, lo])
-    order = np.lexsort((d, s))
-    s, d = s[order], d[order]
+    s, d = _normalize_edges(edges, n_nodes)
     m2 = s.shape[0]
     slots = int(num_slots) if num_slots is not None else m2
     if slots < m2:
@@ -104,6 +122,247 @@ def from_edges(
         deg=jnp.asarray(counts[:n_nodes], dtype=jnp.int32),
         n_edges_dir=jnp.asarray(m2, dtype=jnp.int32),
         n_nodes=int(n_nodes),
+    )
+
+
+# ---------------------------------------------------------------- batching
+#
+# The batched pipeline packs B graphs into one ``GraphBatch`` of a shared
+# static ``(n_budget, slot_budget)`` shape and vmaps the single-graph
+# algorithms over the lanes.  Each lane IS a valid ``Graph`` whose static
+# vertex count is the budget: vertices ``n_nodes[i] .. n_budget-1`` are
+# merely isolated (degree 0), and isolated vertices change neither BFS
+# levels of real vertices, nor horizontal marking, nor any triangle count
+# — so lane results are bit-identical to the unpadded single-graph run.
+
+#: Candidate-width grid the packer's exceedance metadata is computed on
+#: (a superset of ``DEFAULT_BUCKET_WIDTHS`` so bounded batch plans can
+#: bucket at any of these without re-reading the graph).
+META_WIDTHS = (8, 32, 64, 256, 1024)
+
+#: Quantization step for the static degree metadata (row counts are
+#: rounded up to this multiple so same-scale traffic shares pytree
+#: treedefs, plan-cache keys and jit cache entries).
+META_ROW_QUANT = 64
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return max(mult, -(-int(x) // mult) * mult)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ShapeBudget:
+    """One cell of the static-shape grid a request is rounded onto:
+    ``n_budget`` vertex slots and ``slot_budget`` directed edge slots."""
+
+    n_budget: int
+    slot_budget: int
+
+
+class BudgetGrid:
+    """Rounds arbitrary request sizes onto a fixed geometric grid of
+    ``ShapeBudget``s so the number of distinct compiled programs (and
+    plan-cache entries) stays logarithmic in the largest request, not
+    linear in the number of distinct request shapes.
+    """
+
+    def __init__(self, *, min_nodes: int = 64, min_slots: int = 256,
+                 factor: float = 2.0):
+        if factor <= 1.0:
+            raise ValueError("factor must be > 1")
+        self.min_nodes = int(min_nodes)
+        self.min_slots = int(min_slots)
+        self.factor = float(factor)
+
+    def _round(self, x: int, lo: int) -> int:
+        if x <= lo:
+            return lo
+        k = math.ceil(math.log(x / lo) / math.log(self.factor) - 1e-9)
+        return int(math.ceil(lo * self.factor ** k))
+
+    def budget_for(self, n_nodes: int, n_edges_und: int) -> ShapeBudget:
+        """Smallest grid cell fitting ``n_nodes`` vertices and
+        ``n_edges_und`` undirected edges (2 directed slots each)."""
+        return ShapeBudget(
+            n_budget=self._round(int(n_nodes), self.min_nodes),
+            slot_budget=self._round(2 * int(n_edges_und), self.min_slots),
+        )
+
+
+DEFAULT_BUDGET_GRID = BudgetGrid()
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDegreeMeta:
+    """Quantized host-side degree metadata of one packed batch — all the
+    planner needs to lay out a safe bounded ``IntersectPlan`` without a
+    device sync (see ``core.sequential.batch_plan_for``).
+
+    ``d_pad``: pow2-rounded max degree over the batch.  ``h_rows``:
+    row-quantized upper bound on any lane's horizontal-query count (its
+    undirected edge count).  ``exceed``: per ``META_WIDTHS`` width ``w``,
+    a row-quantized upper bound on any lane's number of undirected edges
+    whose smaller endpoint has degree > ``w``.  All bounds are rounded
+    *up*, so plans built from them stay exact; the rounding exists so
+    same-scale batches hash to the same plan-cache / jit-cache keys.
+    """
+
+    d_pad: int
+    h_rows: int
+    exceed: tuple[tuple[int, int], ...]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """B budget-padded graphs with a shared static shape.
+
+    Attributes:
+      src, dst:     int32[B, slot_budget] per-lane CSR-sorted directed
+                    edges; padding has ``src == dst == n_budget``.
+      row_offsets:  int32[B, n_budget + 2] per-lane CSR offsets.
+      deg:          int32[B, n_budget] per-lane degrees.
+      n_nodes:      int32[B] — *real* vertex count of each lane.
+      n_edges_dir:  int32[B] — real directed edge count of each lane.
+      n_budget:     static shared vertex budget (= the lane sentinel).
+      meta:         optional static ``BatchDegreeMeta`` (attached by
+                    ``from_edges_batch``; ``None`` on hand-built views).
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    row_offsets: jnp.ndarray
+    deg: jnp.ndarray
+    n_nodes: jnp.ndarray
+    n_edges_dir: jnp.ndarray
+    n_budget: int = dataclasses.field(metadata=dict(static=True))
+    meta: Optional[BatchDegreeMeta] = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
+
+    @property
+    def batch_size(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def slot_budget(self) -> int:
+        return self.src.shape[1]
+
+    @property
+    def budget(self) -> ShapeBudget:
+        return ShapeBudget(self.n_budget, self.slot_budget)
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_budget
+
+    def lane_view(self) -> Graph:
+        """The batch as a ``Graph`` pytree with a leading lane axis on
+        every array leaf and the *budget* as the static vertex count —
+        the form ``jax.vmap`` maps the single-graph algorithms over."""
+        return Graph(
+            src=self.src, dst=self.dst, row_offsets=self.row_offsets,
+            deg=self.deg, n_edges_dir=self.n_edges_dir,
+            n_nodes=self.n_budget,
+        )
+
+
+def from_edges_batch(
+    graphs: Sequence[tuple[np.ndarray, int]],
+    *,
+    budget: Optional[ShapeBudget] = None,
+    grid: Optional[BudgetGrid] = None,
+    batch_size: Optional[int] = None,
+    with_meta: bool = True,
+) -> GraphBatch:
+    """Pack ``(edges, n_nodes)`` requests into one ``GraphBatch``.
+
+    Each request goes through the same host-side normalization as
+    ``from_edges`` (dedup / self-loop drop / symmetrize / CSR-sort) and
+    is padded onto ``budget`` — by default the smallest ``grid`` cell
+    fitting the largest request.  ``batch_size`` pads the batch with
+    empty lanes (the serving layer's fixed-B contract); ``with_meta``
+    attaches the quantized ``BatchDegreeMeta`` the sync-free bounded
+    planner consumes.
+    """
+    if batch_size is not None and len(graphs) > batch_size:
+        raise ValueError(f"{len(graphs)} graphs > batch_size={batch_size}")
+    norm = [(_normalize_edges(e, n), int(n)) for e, n in graphs]
+    if budget is None:
+        grid = grid or DEFAULT_BUDGET_GRID
+        budget = grid.budget_for(
+            max((n for _, n in norm), default=0),
+            max((s.shape[0] for (s, _), _ in norm), default=0) // 2,
+        )
+    nb, slots = budget.n_budget, budget.slot_budget
+    B = int(batch_size) if batch_size is not None else max(1, len(norm))
+    src = np.full((B, slots), nb, dtype=np.int64)
+    dst = np.full((B, slots), nb, dtype=np.int64)
+    row = np.zeros((B, nb + 2), dtype=np.int64)
+    row[:, nb + 1] = slots  # sentinel row closes at the slot budget on
+    #   EVERY lane (empty padding lanes included) — the Graph invariant
+    deg = np.zeros((B, nb), dtype=np.int64)
+    n_nodes = np.zeros(B, dtype=np.int64)
+    m2s = np.zeros(B, dtype=np.int64)
+    d_max = 0
+    h_count = 0
+    exceed = {w: 0 for w in META_WIDTHS}
+    for i, ((s, d), n) in enumerate(norm):
+        m2 = s.shape[0]
+        if n > nb:
+            raise ValueError(f"graph {i}: n_nodes={n} > n_budget={nb}")
+        if m2 > slots:
+            raise ValueError(f"graph {i}: 2m={m2} > slot_budget={slots}")
+        src[i, :m2] = s
+        dst[i, :m2] = d
+        counts = np.bincount(s, minlength=nb + 1)[:nb]
+        deg[i] = counts
+        np.cumsum(counts, out=row[i, 1:nb + 1])
+        n_nodes[i] = n
+        m2s[i] = m2
+        if with_meta and m2:
+            d_max = max(d_max, int(counts.max()))
+            h_count = max(h_count, m2 // 2)
+            und = s < d
+            mind = np.minimum(counts[s[und]], counts[d[und]])
+            for w in META_WIDTHS:
+                exceed[w] = max(exceed[w], int((mind > w).sum()))
+    meta = None
+    if with_meta:
+        meta = BatchDegreeMeta(
+            d_pad=_next_pow2(max(d_max, 1)),
+            h_rows=_ceil_to(max(h_count, 1), META_ROW_QUANT),
+            exceed=tuple(
+                (w, _ceil_to(c, META_ROW_QUANT) if c else 0)
+                for w, c in sorted(exceed.items())
+            ),
+        )
+    return GraphBatch(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        row_offsets=jnp.asarray(row, jnp.int32),
+        deg=jnp.asarray(deg, jnp.int32),
+        n_nodes=jnp.asarray(n_nodes, jnp.int32),
+        n_edges_dir=jnp.asarray(m2s, jnp.int32),
+        n_budget=nb,
+        meta=meta,
+    )
+
+
+def to_batch(g: Graph) -> GraphBatch:
+    """A zero-copy B=1 ``GraphBatch`` view of a ``Graph`` (the budget is
+    the graph's own shape) — how the single-graph API rides the batched
+    code path."""
+    return GraphBatch(
+        src=g.src[None], dst=g.dst[None],
+        row_offsets=g.row_offsets[None], deg=g.deg[None],
+        n_nodes=jnp.asarray([g.n_nodes], jnp.int32),
+        n_edges_dir=g.n_edges_dir[None],
+        n_budget=g.n_nodes,
     )
 
 

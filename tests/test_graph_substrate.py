@@ -42,6 +42,38 @@ def test_padding_and_dedup():
     assert int(jnp.sum(g.src == 3)) == 12  # sentinel padding
 
 
+def test_empty_graph_n_zero():
+    """n_nodes=0 used to crash on the packed-key division; it must build
+    a consistent (if degenerate) container."""
+    for edges in (np.zeros((0, 2), np.int64), np.array([[0, 0]])):
+        g = from_edges(edges, 0)
+        assert g.n_nodes == 0
+        assert g.num_slots == 0
+        assert int(g.n_edges_dir) == 0
+        assert g.deg.shape == (0,)
+        assert np.asarray(g.row_offsets).tolist() == [0, 0]
+    g = from_edges(np.zeros((0, 2)), 0, num_slots=8)
+    assert g.num_slots == 8
+    assert int(jnp.sum(g.src == 0)) == 8  # sentinel == n_nodes == 0
+
+
+def test_zero_edge_graph_counts_zero():
+    """Vertices but no edges (also: self-loops only) — the whole
+    pipeline must run and count zero."""
+    from repro.core.sequential import triangle_count
+
+    for edges in (np.zeros((0, 2), np.int64),
+                  np.array([[1, 1], [3, 3]])):
+        g = from_edges(edges, 5)
+        assert int(g.n_edges_dir) == 0
+        assert int(jnp.sum(g.deg)) == 0
+        res = triangle_count(g)
+        assert int(res.triangles) == 0
+        assert int(res.num_horizontal) == 0
+        assert float(res.k) == 0.0
+        assert not bool(res.h_overflow)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.integers(0, 49), min_size=0, max_size=60), st.integers(0, 60))
 def test_bounded_binary_search_matches_numpy(vals, q):
