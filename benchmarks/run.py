@@ -17,6 +17,11 @@ no argument runs everything.
               one-graph-per-call loop on a mixed request stream:
               throughput vs batch size, p50/p99 latency, plan-cache and
               jit-cache behavior; writes ``results/BENCH_serve.json``
+  comm     -> measured vs modeled communication per phase for
+              p in {1, 2, 4, 8} on scale-10/12 RMAT (subprocess, 8 host
+              devices) + the k·m·p hedge-volume scaling curve; writes
+              ``results/BENCH_comm.json``.  ``comm_smoke`` is the CI
+              variant (scale 10, p = 4 only, same JSON)
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -92,6 +97,15 @@ def bench_parallel():
         "from benchmarks.tc_bench import measure_parallel\n"
         f"measure_parallel(scale=10, p=8, out={json_out!r})\n"
     )
+    _run_in_8dev_subprocess(body, json_out, "parallel")
+
+
+def _run_in_8dev_subprocess(body: str, json_out: str, tag: str) -> None:
+    """Run ``body`` with 8 forced host devices (the flag must precede
+    the first jax import, hence the subprocess) and report its output.
+    A failing subprocess fails THIS process too — these benches gate CI
+    (the comm smoke's measured==tally asserts), so an error must turn
+    the step red, not print a CSV line and exit 0."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     src = os.path.join(_ROOT, "src")
@@ -101,11 +115,28 @@ def bench_parallel():
     out = subprocess.run([sys.executable, "-c", body], env=env,
                          capture_output=True, text=True, timeout=900)
     if out.returncode:
-        err = out.stderr.strip().splitlines()[-1][:80] if out.stderr else "?"
-        print(f"parallel_tc_p8,0,ERROR:{err}")
-    else:
-        print(out.stdout.strip())
-        print(f"parallel_json,0,written={json_out}")
+        err = out.stderr.strip().splitlines()[-1][:200] if out.stderr else "?"
+        print(f"{tag},0,ERROR:{err}")
+        raise SystemExit(f"{tag} bench subprocess failed: {err}")
+    print(out.stdout.strip())
+    print(f"{tag}_json,0,written={json_out}")
+
+
+def bench_comm(smoke: bool = False):
+    """Measured-vs-modeled communication accounting (DESIGN.md §5):
+    the comm instrument's per-phase volumes against the analytic tally
+    and the closed-form wire model, p in {1, 2, 4, 8}, plus the hedge
+    scaling curve.  Writes ``results/BENCH_comm.json``."""
+    json_out = os.path.normpath(
+        os.path.join(_ROOT, "results", "BENCH_comm.json")
+    )
+    args = ("scales=(10,), ps=(4,)" if smoke
+            else "scales=(10, 12), ps=(1, 2, 4, 8)")
+    body = (
+        "from benchmarks.comm_bench import measure_comm\n"
+        f"measure_comm({args}, execute_scale=10, out={json_out!r})\n"
+    )
+    _run_in_8dev_subprocess(body, json_out, "comm")
 
 
 def bench_serve():
@@ -143,6 +174,8 @@ BENCHES = {
     "tc": bench_tc,
     "parallel": bench_parallel,
     "serve": bench_serve,
+    "comm": bench_comm,
+    "comm_smoke": lambda: bench_comm(smoke=True),
     "roofline": bench_roofline,
 }
 
@@ -153,7 +186,10 @@ def main(argv: list[str] | None = None) -> None:
     if unknown:
         sys.exit(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    for name in argv or BENCHES:
+    # run-everything excludes comm_smoke: it would overwrite the full
+    # comm sweep's BENCH_comm.json with the CI subset
+    default = [n for n in BENCHES if n != "comm_smoke"]
+    for name in argv or default:
         BENCHES[name]()
 
 

@@ -62,6 +62,22 @@ def main():
     print(f"\nmodelled comm: wedge={cm.fmt_bytes(old)} "
           f"cover-edge={cm.fmt_bytes(new)} -> {old/new:.1f}x reduction")
 
+    # the measured loop (DESIGN.md §5): every run carries its CommTally,
+    # and the instrument's per-collective extraction must match it
+    from repro.core import comm_instrument as ci
+
+    tally = res.comm.phase_bytes()
+    sweeps = int(jax.device_get(res.comm.bfs_sweeps))
+    rep = ci.comm_report(n, int(g.n_edges_dir), p, sweeps=sweeps,
+                         mode="ring", hedge_chunk=chunk)
+    print(f"\nmeasured wire bytes (ring, p={p}, {sweeps} BFS sweeps):")
+    for ph, row in rep["phases"].items():
+        agree = "==" if row["measured"] == tally[ph] else "!="
+        print(f"  {ph:>9}: measured={row['measured']:>10} {agree} "
+              f"tally={tally[ph]:>10}  modeled={row['modeled']:.0f}")
+    assert all(r["measured"] == tally[ph]
+               for ph, r in rep["phases"].items())
+
 
 if __name__ == "__main__":
     main()

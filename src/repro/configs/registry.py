@@ -337,7 +337,7 @@ def _bst_cell(cfg, shape_name: str, mesh: Mesh, opt_cfg: OptConfig) -> Cell:
 
 def _tc_cell(cfg: dict, shape_name: str, mesh: Mesh) -> Cell:
     from repro.configs.cover_edge_tc import SHAPES
-    from repro.core.parallel_tc import ParallelTCResult, build_tc_shard_fn
+    from repro.core.parallel_tc import build_tc_shard_fn, result_out_specs
 
     info = {**cfg, **SHAPES[shape_name]}  # shape owns scale/edge_factor
     info.update({k: v for k, v in cfg.items()
@@ -356,13 +356,9 @@ def _tc_cell(cfg: dict, shape_name: str, mesh: Mesh) -> Cell:
         slack=info.get("slack", 4.0),
         frontier_dtype=info.get("frontier_dtype", "int32"),
     )
-    out_specs = ParallelTCResult(
-        triangles=P(), per_device=P("p"), k=P(), num_horizontal=P(),
-        transpose_overflow=P(), hedge_overflow=P(), recv_counts=P("p"),
-    )
     fn = shard_map(
         fn_shard, mesh=tc_mesh, in_specs=(P("p"), P("p")),
-        out_specs=out_specs,
+        out_specs=result_out_specs("p"),
     )
     args = (
         _sds((p * cap_edges,), jnp.int32), _sds((p * cap_edges,), jnp.int32),

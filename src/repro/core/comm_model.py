@@ -10,13 +10,20 @@ questions and must not be conflated:
     Table I and of the 21×/176× headline reductions, and reproducing
     those numbers *exactly* is this module's contract.
 
-  * **wire-bytes** (``wire_bytes_report``) — what our TPU collectives
+  * **wire-bytes** (``wire_bytes_report``) — what our collectives
     actually move: whole int32 words (x32 JAX, no bit packing) at the
     *static* capacities ``parallel_tc`` allocates (padded chunks, not
     exact counts).  This is the currency of roofline/deployment math.
     It is strictly larger than paper-bits — by the 32/⌈log n⌉ packing
     ratio and the capacity slack — but scales identically, which is the
     point: the algorithmic win survives the hardware spelling.
+
+    Since PR 4 this view is keyed by the phase names in ``WIRE_PHASES``
+    and shares its per-collective transmit-bytes convention (the
+    ``*_wire_bytes`` helpers below) with the *measured* side
+    (``core.comm_instrument``), so model and measurement can be compared
+    term by term: modeled == measured whenever the model's capacities
+    and level count match the program's.
 
 Verified against the paper: scale-36 (p=128) -> 408 TB, 21.04x; scale-42
 (p=256) -> 57.1 PB, 176.5x (see ``TABLE_I`` and
@@ -153,24 +160,99 @@ TABLE_I = {
 }
 
 
+# ---- wire-bytes view: shared phase names + transfer conventions ----------
+
+#: Phase names of Algorithm 2's communication, in execution order.  The
+#: modeled report below, the analytic ``CommTally`` threaded through
+#: ``parallel_tc._tc_shard`` and the measured per-collective extraction
+#: in ``core.comm_instrument`` are all keyed by exactly these names.
+WIRE_PHASES = ("bfs", "splitter", "transpose", "hedge", "reduce")
+
+#: Scalar cross-device reductions the shard program performs per run
+#: (``parallel_tc._tc_shard``: transpose-overflow pmax, hedge-overflow
+#: pmax, width-overflow pmax, and the t_i / n_h / m psums).  Kept in
+#: lockstep with the implementation — the comm-instrument test asserts
+#: the lowered program contains exactly this many scalar all-reduces.
+NUM_SCALAR_REDUCES = 6
+
+
+
+def allreduce_wire_bytes(payload_bytes: float, p: int) -> float:
+    """Total wire bytes, summed over devices, of one all-reduce
+    (psum/pmax) of a ``payload_bytes`` buffer: the standard ring
+    all-reduce ships 2(p-1)/p of the payload per device."""
+    return 2 * (p - 1) * payload_bytes
+
+
+def allgather_wire_bytes(shard_bytes: float, p: int) -> float:
+    """Total wire bytes of one all-gather of a ``shard_bytes`` shard:
+    each of the p shards must reach the other p-1 devices."""
+    return p * (p - 1) * shard_bytes
+
+
+def alltoall_wire_bytes(staging_bytes: float, p: int) -> float:
+    """Total wire bytes of one all-to-all over a per-device staging
+    buffer of ``staging_bytes`` (p chunks): every device keeps its own
+    chunk and ships the other p-1."""
+    return (p - 1) * staging_bytes
+
+
+def ppermute_wire_bytes(buffer_bytes: float, cross_pairs: int) -> float:
+    """Total wire bytes of one ppermute: every (src != dst) pair ships
+    the whole ``buffer_bytes`` buffer (a p-cycle has p cross pairs for
+    p > 1, none for p == 1)."""
+    return cross_pairs * buffer_bytes
+
+
 def wire_bytes_report(
-    m2: int, p: int, *, cap_chunk: int, cap_hedge: int, n_levels: int, n: int
+    n: int,
+    p: int,
+    *,
+    cap_chunk: int,
+    cap_hedge: int,
+    n_levels: int,
+    mode: str = "allgather",
+    frontier_dtype: str = "int32",
 ) -> dict[str, float]:
-    """Bytes our ``parallel_tc`` implementation actually moves (int32
-    wire), per collective, per full algorithm run, summed over devices.
+    """Bytes our ``parallel_tc`` implementation moves (int32 wire), per
+    phase (keys = ``WIRE_PHASES``), per full algorithm run, summed over
+    devices.
 
     This is the wire-bytes view (module docstring): capacities are the
     *static* buffers the shard function allocates (``cap_chunk`` padded
     transpose chunks, ``cap_hedge`` horizontal slots — see
     ``parallel_tc._capacities``), so each term is the paper-bits term's
-    hardware spelling: same shape in (n, m, k, p), int32 words instead of
-    packed bits, capacity slack instead of exact counts."""
+    hardware spelling: same shape in (n, m, k, p), int32 words instead
+    of packed bits, capacity slack instead of exact counts.  Each term
+    uses the ``*_wire_bytes`` convention shared with the measured side
+    (``core.comm_instrument``), so with ``n_levels`` set to the run's
+    actual BFS sweep count the report equals the measured volumes
+    exactly; with an upper-bound ``n_levels`` it is a per-phase
+    envelope.  ``mode`` is accepted for interface symmetry: the ring
+    spelling's (p-1) rounds of p-cycle ppermutes move exactly the
+    all-gather volume (the paper's equivalence, asserted by the
+    instrument tests)."""
+    import numpy as np
+
     word = 4
+    # same resolution as tally_comm — an unknown dtype must fail loudly,
+    # not silently price the BFS exchange at the wrong width
+    fsize = np.dtype(str(frontier_dtype)).itemsize
+    if mode not in ("allgather", "ring"):
+        raise ValueError(mode)
     return {
-        # level vector pmax per BFS level, all-reduce ~ 2x payload per device
-        "bfs_level_pmax": 2.0 * n * word * n_levels * p,
-        "splitter_all_gather": p * p * word * p,
-        "transpose_all_to_all": 2 * p * cap_chunk * word * p,  # (v, x) pairs
-        "hedge_all_gather": 2 * cap_hedge * word * p * p,
-        "count_psum": p * word,
+        # one has-edge seeding pmax (int32) + one frontier pmax
+        # (frontier_dtype) per BFS sweep, each over the n-vector
+        "bfs": allreduce_wire_bytes(n * word, p)
+        + n_levels * allreduce_wire_bytes(n * fsize, p),
+        # regular-sampling gossip: all-gather of p int32 samples/device
+        "splitter": allgather_wire_bytes(p * word, p),
+        # the N-hat transpose: two all-to-alls (values, carry) over the
+        # (p, cap_chunk) staging buffers
+        "transpose": 2 * alltoall_wire_bytes(p * cap_chunk * word, p),
+        # horizontal rounds: two buffers of cap_hedge words visit every
+        # other device once — all-gather and ring spell it identically
+        "hedge": 2 * allgather_wire_bytes(cap_hedge * word, p),
+        # the scalar overflow pmaxes + count psums
+        "reduce": NUM_SCALAR_REDUCES * allreduce_wire_bytes(word, p),
     }

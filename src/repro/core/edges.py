@@ -124,15 +124,22 @@ def mindeg_exceedance(g, widths) -> tuple[int, ...]:
 
 
 def classify_edges(src, dst, level, n_nodes):
-    """Return int8 class per directed edge: 0 pad/invalid, 1 horizontal,
-    2 adjacent-level (tree or strut).  (Tree-vs-strut needs parent pointers,
-    which the counting algorithm never uses.)"""
+    """Return int8 class per directed edge: 0 pad/invalid/unvisited,
+    1 horizontal, 2 adjacent-level (tree or strut).  (Tree-vs-strut needs
+    parent pointers, which the counting algorithm never uses.)
+
+    An edge between two UNVISITED vertices has ``ls == ld`` but is NOT
+    horizontal — without the ``ls != UNVISITED`` guard (the same guard
+    ``horizontal_mask`` applies) a partial BFS would classify every
+    unreached component's edges as class 1."""
     valid = (src < n_nodes) & (dst < n_nodes)
     lev_ext = jnp.concatenate([level, jnp.full((1,), UNVISITED, jnp.int32)])
     ls = lev_ext[jnp.clip(src, 0, n_nodes)]
     ld = lev_ext[jnp.clip(dst, 0, n_nodes)]
-    horiz = valid & (ls == ld)
-    adj = valid & (jnp.abs(ls - ld) == 1)
+    horiz = valid & (ls == ld) & (ls != UNVISITED)
+    adj = valid & (ls != UNVISITED) & (ld != UNVISITED) & (
+        jnp.abs(ls - ld) == 1
+    )
     return jnp.where(horiz, 1, jnp.where(adj, 2, 0)).astype(jnp.int8)
 
 

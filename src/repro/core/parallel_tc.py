@@ -44,7 +44,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import pvary, shard_map
-from repro.core.bfs import bfs_levels
+from repro.core.bfs import UNVISITED, bfs_levels
+from repro.core.comm_instrument import CommTally, tally_comm
 from repro.core.edges import horizontal_mask, mindeg_exceedance
 from repro.core.intersect import (
     DEFAULT_BUCKET_WIDTHS,
@@ -69,6 +70,29 @@ class ParallelTCResult:
     transpose_overflow: jnp.ndarray
     hedge_overflow: jnp.ndarray
     recv_counts: jnp.ndarray  # transposed elements per device
+    comm: CommTally           # per-phase wire bytes this run moved
+
+
+def result_out_specs(axis_name: str = "p"):
+    """``shard_map`` out_specs pytree for ``_tc_shard``'s result —
+    per-device fields sharded over ``axis_name``, everything else
+    (scalars + the comm tally) replicated.  The ONE definition shared
+    by ``parallel_triangle_count``, the dry-run registry and the comm
+    instrument, so adding a result field cannot silently desynchronize
+    them."""
+    rep = P()
+    return ParallelTCResult(
+        triangles=rep,
+        per_device=P(axis_name),
+        k=rep,
+        num_horizontal=rep,
+        transpose_overflow=rep,
+        hedge_overflow=rep,
+        recv_counts=P(axis_name),
+        comm=CommTally(
+            **{f.name: rep for f in dataclasses.fields(CommTally)}
+        ),
+    )
 
 
 def _capacities(m2: int, p: int, slack: float) -> tuple[int, int, int]:
@@ -191,7 +215,16 @@ def _tc_shard(
     mode: str = "allgather",
     frontier_dtype: str = "int32",
 ):
-    """Per-device body. ``src_i/dst_i`` int32[cap_edges] sentinel-padded."""
+    """Per-device body. ``src_i/dst_i`` int32[cap_edges] sentinel-padded.
+
+    Besides the count, the result carries a ``CommTally``: per-phase
+    wire bytes of this very run, computed from the static capacities
+    plus the BFS sweep count (the one data-dependent factor — every
+    sweep is one frontier pmax).  ``tests/test_comm_instrument.py``
+    asserts the tally equals the per-collective volumes extracted from
+    the lowered program, so the collective inventory below cannot drift
+    from the accounting silently (see ``comm_model.NUM_SCALAR_REDUCES``
+    when adding or removing a scalar psum/pmax here)."""
     inf = n + 1
     # ---- line 2: parallel BFS + horizontal marking -------------------
     level = bfs_levels(src_i, dst_i, n, root=root, axis_name=axis_name,
@@ -236,19 +269,25 @@ def _tc_shard(
         t_i = t0 + eng.c1
         d_ovf = o0 | eng.overflow
     elif mode == "ring":
-        # p ppermute rounds: O(cap_hedge) memory, intersection of round r
-        # overlaps with the transfer of round r+1 (the paper's lines 36-42)
+        # probe the local shard, then p-1 ppermute rounds: O(cap_hedge)
+        # memory, intersection of round r overlaps with the transfer of
+        # round r+1 (the paper's lines 36-42).  Exactly p-1 permutes —
+        # a p-th would only return the buffers to their origin, moving
+        # k·m wire for nothing (and breaking the wire-volume equality
+        # with allgather mode that the comm instrument asserts).
         perm = [(i, (i + 1) % p) for i in range(p)]
+        eng0 = run_plan(adj, hv, hw, hplan)
 
         def round_body(r, carry):
             t, o, cv, cw = carry
-            eng = run_plan(adj, cv, cw, hplan)
             cv = jax.lax.ppermute(cv, axis_name, perm)
             cw = jax.lax.ppermute(cw, axis_name, perm)
+            eng = run_plan(adj, cv, cw, hplan)
             return t + eng.c1, o | eng.overflow, cv, cw
 
         t_i, d_ovf, _, _ = jax.lax.fori_loop(
-            0, p, round_body, (t0, o0, hv, hw)
+            0, p - 1, round_body,
+            (t0 + eng0.c1, o0 | eng0.overflow, hv, hw)
         )
     else:
         raise ValueError(mode)
@@ -260,6 +299,14 @@ def _tc_shard(
     n_h = jax.lax.psum(n_h_local, axis_name)
     m = jax.lax.psum(jnp.sum(valid & (src_i < dst_i), dtype=jnp.int32), axis_name)
     k = n_h / jnp.maximum(m, 1)
+    # every BFS sweep ran one frontier pmax and assigned level cur+1 to
+    # at least one vertex (reseeds included), so sweeps = max level + 1;
+    # level is pmax-synced, hence replicated, hence so is the tally
+    sweeps = jnp.max(jnp.where(level == UNVISITED, 0, level)) + 1
+    comm = tally_comm(
+        n=n, p=p, cap_chunk=cap_chunk, cap_hedge=cap_hedge, mode=mode,
+        frontier_dtype=frontier_dtype, sweeps=sweeps,
+    )
     return ParallelTCResult(
         triangles=T,
         per_device=t_i.reshape(1),
@@ -268,6 +315,7 @@ def _tc_shard(
         transpose_overflow=rep.overflow | d_overflow,
         hedge_overflow=hedge_overflow,
         recv_counts=rep.count.reshape(1),
+        comm=comm,
     )
 
 
@@ -332,10 +380,14 @@ def parallel_triangle_count(
     bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
     intersect_backend: str = "auto",
     interpret: bool | None = None,
+    frontier_dtype: str = "int32",
 ) -> ParallelTCResult:
     """Count triangles of ``g`` on every device of ``mesh``'s ``axis_name``
     axis (the paper's p processors), probing through the shared
-    intersection engine (``intersect_backend`` as in ``triangle_count``)."""
+    intersection engine (``intersect_backend`` as in ``triangle_count``).
+    ``frontier_dtype`` is the BFS frontier exchange's wire dtype
+    (``"uint8"`` moves 4x fewer BFS bytes per sweep — visible in the
+    result's ``comm`` tally)."""
     backend, interpret = resolve_backend(intersect_backend, interpret)
     p = mesh.shape[axis_name]
     m2 = int(jax.device_get(g.n_edges_dir))
@@ -350,23 +402,21 @@ def parallel_triangle_count(
         bucket_widths=bucket_widths, intersect_backend=backend,
         interpret=interpret, shards=(s_sh, d_sh),
     )
+    # every resolved knob goes to the builder: with hplan given the
+    # backend pair only seeds the (unused) fallback plan, but dropping
+    # them here is exactly how a future fallback path would silently
+    # ignore the caller's choice — plumb all three
     fn, _ = build_tc_shard_fn(
         n=g.n_nodes, m2=m2, p=p, axis_name=axis_name, root=root, slack=slack,
         d_pad=d_pad, mode=mode, hedge_chunk=hedge_chunk, hplan=hplan,
+        intersect_backend=backend, interpret=interpret,
+        frontier_dtype=frontier_dtype,
     )
     shard = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name)),
-        out_specs=ParallelTCResult(
-            triangles=P(),
-            per_device=P(axis_name),
-            k=P(),
-            num_horizontal=P(),
-            transpose_overflow=P(),
-            hedge_overflow=P(),
-            recv_counts=P(axis_name),
-        ),
+        out_specs=result_out_specs(axis_name),
     )
     sharding = NamedSharding(mesh, P(axis_name))
     s_dev = jax.device_put(jnp.asarray(s_sh.reshape(-1)), sharding)

@@ -168,15 +168,25 @@ class BudgetGrid:
     ``ShapeBudget``s so the number of distinct compiled programs (and
     plan-cache entries) stays logarithmic in the largest request, not
     linear in the number of distinct request shapes.
+
+    ``max_nodes``/``max_slots`` cap the grid at a top cell: requests
+    whose rounded cell would exceed either cap do not ``fit`` and make
+    ``budget_for`` raise — the serving layer routes those to the
+    distributed (Algorithm 2) backend instead of padding one sequential
+    lane to an arbitrarily large static shape.  ``None`` (default)
+    leaves the grid unbounded, the pre-PR-4 behavior.
     """
 
     def __init__(self, *, min_nodes: int = 64, min_slots: int = 256,
-                 factor: float = 2.0):
+                 factor: float = 2.0, max_nodes: int | None = None,
+                 max_slots: int | None = None):
         if factor <= 1.0:
             raise ValueError("factor must be > 1")
         self.min_nodes = int(min_nodes)
         self.min_slots = int(min_slots)
         self.factor = float(factor)
+        self.max_nodes = int(max_nodes) if max_nodes is not None else None
+        self.max_slots = int(max_slots) if max_slots is not None else None
 
     def _round(self, x: int, lo: int) -> int:
         if x <= lo:
@@ -184,13 +194,32 @@ class BudgetGrid:
         k = math.ceil(math.log(x / lo) / math.log(self.factor) - 1e-9)
         return int(math.ceil(lo * self.factor ** k))
 
-    def budget_for(self, n_nodes: int, n_edges_und: int) -> ShapeBudget:
-        """Smallest grid cell fitting ``n_nodes`` vertices and
-        ``n_edges_und`` undirected edges (2 directed slots each)."""
+    def _cell(self, n_nodes: int, n_edges_und: int) -> ShapeBudget:
         return ShapeBudget(
             n_budget=self._round(int(n_nodes), self.min_nodes),
             slot_budget=self._round(2 * int(n_edges_und), self.min_slots),
         )
+
+    def fits(self, n_nodes: int, n_edges_und: int) -> bool:
+        """True iff the request's grid cell is within the top cell."""
+        b = self._cell(n_nodes, n_edges_und)
+        return (self.max_nodes is None or b.n_budget <= self.max_nodes) and (
+            self.max_slots is None or b.slot_budget <= self.max_slots
+        )
+
+    def budget_for(self, n_nodes: int, n_edges_und: int) -> ShapeBudget:
+        """Smallest grid cell fitting ``n_nodes`` vertices and
+        ``n_edges_und`` undirected edges (2 directed slots each).
+        Raises for requests over the top cell — callers owning an
+        overflow path (``launch.serve_tc``) check ``fits`` first."""
+        if not self.fits(n_nodes, n_edges_und):
+            raise ValueError(
+                f"request ({n_nodes} nodes, {n_edges_und} edges) exceeds "
+                f"the grid's top cell (max_nodes={self.max_nodes}, "
+                f"max_slots={self.max_slots}); route it to the "
+                f"distributed backend"
+            )
+        return self._cell(n_nodes, n_edges_und)
 
 
 DEFAULT_BUDGET_GRID = BudgetGrid()

@@ -31,15 +31,34 @@ def rmat(
     c: float = GRAPH500_C,
     seed: int = 0,
 ) -> tuple[np.ndarray, int]:
-    """Graph500 R-MAT generator (Chakrabarti et al., SDM'04)."""
+    """Graph500 R-MAT generator (Chakrabarti et al., SDM'04).
+
+    ``a, b, c`` are the upper-left / upper-right / lower-left quadrant
+    probabilities (``d = 1 - a - b - c`` implied).  They must be
+    non-negative and sum to at most 1 — otherwise the recursive
+    quadrant-picking below normalizes into a nonsense distribution
+    (``c_norm > 1`` etc.) and silently produces a graph from no valid
+    R-MAT model, so invalid inputs fail loudly instead.
+    """
+    # the epsilon admits valid triples whose float sum lands a few ulps
+    # above 1 (e.g. 0.33 + 0.56 + 0.11) while still rejecting real
+    # violations like the motivating a=0.9, b=0.3, c=0.3
+    if min(a, b, c) < 0 or a + b + c > 1 + 1e-9:
+        raise ValueError(
+            f"rmat probabilities must satisfy a, b, c >= 0 and "
+            f"a + b + c <= 1; got a={a}, b={b}, c={c} "
+            f"(sum {a + b + c})"
+        )
     n = 1 << scale
     m = edge_factor * n
     rng = np.random.default_rng(seed)
     src = np.zeros(m, dtype=np.int64)
     dst = np.zeros(m, dtype=np.int64)
     ab = a + b
-    c_norm = c / (1.0 - ab)
-    a_norm = a / ab
+    # degenerate-but-valid corners: ab == 1 forces c == 0, ab == 0 puts
+    # all left-quadrant mass on c — either way the conditional is constant
+    c_norm = c / (1.0 - ab) if ab < 1.0 else 0.0
+    a_norm = a / ab if ab > 0.0 else 0.0
     for bit in range(scale):
         r1 = rng.random(m)
         r2 = rng.random(m)

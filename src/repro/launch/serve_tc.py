@@ -10,6 +10,11 @@ compaction + planned intersection via
 (``batch_plan_for``): no host round-trip inside a batch, a bounded
 compile grid across the stream (DESIGN.md §4).
 
+Requests too big for the grid's top cell don't pad a sequential lane to
+an arbitrary static shape — they route to the distributed Algorithm 2
+backend (``core.parallel_tc``) over the device mesh, with the exchange
+mode picked from the analytic hedge-phase volume (DESIGN.md §5).
+
   PYTHONPATH=src python -m repro.launch.serve_tc --smoke
   PYTHONPATH=src python -m repro.launch.serve_tc --requests 96 --batch-sizes 1 2 8 16
 """
@@ -42,7 +47,14 @@ from repro.graph.csr import (
 @dataclasses.dataclass
 class TriangleAnalytics:
     """One request's serving response: the paper's per-graph analytics
-    plus the latency from submit to batch completion."""
+    plus the latency from submit to batch completion.
+
+    ``route`` records which backend answered: ``"batched"`` (a lane of
+    the fused ``triangle_count_batch`` jit) or ``"distributed"`` (an
+    over-budget graph served by Algorithm 2 over the device mesh).  The
+    distributed algorithm counts every triangle exactly once without
+    the c1/c2 apex-level split, so those responses carry ``c1 == c2 ==
+    -1`` (not computed) rather than a fabricated split."""
 
     request_id: int
     n_nodes: int
@@ -56,8 +68,11 @@ class TriangleAnalytics:
     #: engine width-overflow flag for this lane — False whenever the
     #: bounded plan's bounds were true upper bounds (always, unless a
     #: custom grid/widths setup violates them); True marks the count as
-    #: invalid rather than silently wrong
+    #: invalid rather than silently wrong.  On the distributed route it
+    #: ORs the transpose/hedge capacity flags — same contract: flagged,
+    #: never silently wrong.
     overflow: bool = False
+    route: str = "batched"
 
 
 @dataclasses.dataclass
@@ -101,6 +116,9 @@ class TriangleServer:
         query_chunk: Optional[int] = None,
         root: int = 0,
         max_inflight: int = 8,
+        mesh=None,
+        distributed_mode: str = "auto",
+        gather_buffer_limit_bytes: int = 64 << 20,
     ):
         self.batch_size = int(batch_size)
         self.backend = intersect_backend
@@ -109,20 +127,34 @@ class TriangleServer:
         self.query_chunk = query_chunk
         self.root = int(root)
         self.max_inflight = int(max_inflight)
+        #: device mesh for the distributed route; ``None`` lazily builds
+        #: a 1-D mesh over every local device on first over-budget request
+        self.mesh = mesh
+        #: Algorithm 2 exchange mode for over-budget requests —
+        #: ``"auto"`` picks ring vs allgather per request from the
+        #: analytic hedge-phase volume (``comm_instrument
+        #: .choose_hedge_mode``: same wire total either way, ring's live
+        #: buffer is p x smaller), bounded by ``gather_buffer_limit_bytes``
+        self.distributed_mode = distributed_mode
+        self.gather_buffer_limit_bytes = int(gather_buffer_limit_bytes)
         self._pending: dict[ShapeBudget, list[_Pending]] = defaultdict(list)
         self._inflight: deque = deque()
         self._next_id = 0
         self.results: list[TriangleAnalytics] = []
         self.batches_run = 0
+        self.distributed_requests = 0
 
     def submit(self, edges: np.ndarray, n_nodes: int) -> int:
         """Enqueue one graph; returns its request id.  Flushes the
         budget's batch when full (results land in ``self.results``).
+        Requests over the grid's top cell are answered immediately by
+        the distributed backend instead of a batched lane.
 
         Rejects out-of-range node ids outright: the packer's packed-key
         arithmetic would otherwise silently alias ``id >= n_nodes`` onto
         fabricated edges — a malformed request must fail loudly, not
         produce confident analytics for a graph nobody sent."""
+        self._poll_inflight()  # stamp finished batches BEFORE new host work
         rid = self._next_id
         self._next_id += 1
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
@@ -131,12 +163,74 @@ class TriangleServer:
                 f"request {rid}: edge endpoints must lie in [0, "
                 f"{int(n_nodes)}); got [{edges.min()}, {edges.max()}]"
             )
+        t_submit = time.perf_counter()
+        if not self.grid.fits(int(n_nodes), edges.shape[0]):
+            self._serve_distributed(rid, edges, int(n_nodes), t_submit)
+            return rid
         budget = self.grid.budget_for(int(n_nodes), edges.shape[0])
         q = self._pending[budget]
-        q.append(_Pending(rid, edges, int(n_nodes), time.perf_counter()))
+        q.append(_Pending(rid, edges, int(n_nodes), t_submit))
         if len(q) >= self.batch_size:
             self._flush(budget)
         return rid
+
+    def _serve_distributed(
+        self, rid: int, edges: np.ndarray, n_nodes: int, t_submit: float
+    ) -> None:
+        """Answer one over-budget request through Algorithm 2 on the
+        device mesh (``core.parallel_tc``) — same response type, same
+        never-silently-wrong overflow contract as the batched lanes.
+
+        The graph keeps its natural (un-budgeted) static shape: each
+        distinct over-budget size compiles its own program and plans its
+        own hedge buckets, the right trade for rare big-graph traffic —
+        the point of the route is answering at all, where a batched lane
+        would need an unbounded static budget."""
+        from jax.sharding import Mesh
+
+        from repro.core.comm_instrument import choose_hedge_mode
+        from repro.core.parallel_tc import parallel_triangle_count
+
+        if self.mesh is None:
+            devs = np.array(jax.devices())
+            self.mesh = Mesh(devs.reshape(devs.size), ("p",))
+        p = self.mesh.shape["p"]
+        g = from_edges(edges, n_nodes)
+        m2 = int(jax.device_get(g.n_edges_dir))
+        mode = self.distributed_mode
+        if mode == "auto":
+            mode = choose_hedge_mode(
+                m2, p,
+                gather_buffer_limit_bytes=self.gather_buffer_limit_bytes,
+            )
+        res = parallel_triangle_count(
+            g, self.mesh, root=self.root, mode=mode,
+            intersect_backend=self.backend,
+            bucket_widths=self.bucket_widths,
+        )
+        tri, nh, k, t_ovf, h_ovf = jax.device_get(
+            (res.triangles, res.num_horizontal, res.k,
+             res.transpose_overflow, res.hedge_overflow)
+        )
+        # batches that finished on-device while this (blocking, possibly
+        # seconds-long) run held the host must be stamped NOW, not at
+        # the next submit — the same attribution rule as host packing
+        self._poll_inflight()
+        self.distributed_requests += 1
+        self.results.append(TriangleAnalytics(
+            request_id=rid,
+            n_nodes=n_nodes,
+            triangles=int(tri),
+            c1=-1,
+            c2=-1,
+            num_horizontal=int(nh),
+            k=float(k),
+            latency_s=time.perf_counter() - t_submit,
+            budget=ShapeBudget(n_budget=g.n_nodes,
+                               slot_budget=g.num_slots),
+            overflow=bool(t_ovf) or bool(h_ovf),
+            route="distributed",
+        ))
 
     def drain(self) -> list[TriangleAnalytics]:
         """Flush every partial batch (right-sized), finalize all
@@ -174,7 +268,27 @@ class TriangleServer:
         # res is an in-flight device computation — don't block on it here
         self._inflight.append((reqs, budget, res))
         self.batches_run += 1
+        self._poll_inflight()
         while len(self._inflight) > self.max_inflight:
+            self._finalize_one()
+
+    @staticmethod
+    def _batch_ready(res) -> bool:
+        try:
+            return all(
+                x.is_ready() for x in jax.tree_util.tree_leaves(res)
+            )
+        except AttributeError:  # older jax without Array.is_ready
+            return False
+
+    def _poll_inflight(self) -> None:
+        """Finalize every already-finished in-flight batch NOW, so its
+        requests' latency is stamped at (close to) device completion.
+        Without this, a batch sat in the queue until ``drain`` or the
+        ``max_inflight`` high-water mark forced a fetch, and early
+        batches' p50/p99 absorbed the host time spent packing every
+        later batch in between."""
+        while self._inflight and self._batch_ready(self._inflight[0][2]):
             self._finalize_one()
 
     def _finalize_one(self) -> None:
@@ -203,6 +317,7 @@ class TriangleServer:
         return {
             "requests": len(self.results),
             "batches": self.batches_run,
+            "distributed_requests": self.distributed_requests,
             "p50_ms": _pct_ms(lat, 50),
             "p99_ms": _pct_ms(lat, 99),
         }

@@ -77,6 +77,7 @@ def test_batch_fixture_parity(backend):
         assert float(res.k[3]) == 0.0
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(
     st.lists(

@@ -127,7 +127,9 @@ def test_parallel_parity_meshes_and_backends():
         from jax.sharding import Mesh
         from repro.graph import generators as gen
         from repro.graph.csr import from_edges, max_degree
-        from repro.core.parallel_tc import parallel_triangle_count
+        from repro.core.parallel_tc import (
+            parallel_triangle_count, plan_hedge_rounds,
+        )
         from repro.core.sequential import triangle_count, triangle_count_dense
 
         devs = np.array(jax.devices())
@@ -145,10 +147,16 @@ def test_parallel_parity_meshes_and_backends():
                 seq = triangle_count(g, intersect_backend=backend,
                                      interpret=True)
                 assert int(seq.triangles) == want, (name, backend)
+                # the plumbed path: the hedge plan the distributed run
+                # executes must carry the caller's backend choice
+                hp = plan_hedge_rounds(g, 2, intersect_backend=backend,
+                                       interpret=True)
+                assert hp.backend == backend, (name, backend)
                 for p in (1, 2, 4):
                     mesh = Mesh(devs[:p].reshape(p), ('p',))
                     res = parallel_triangle_count(
-                        g, mesh, intersect_backend=backend, interpret=True)
+                        g, mesh, intersect_backend=backend, interpret=True,
+                        frontier_dtype='uint8' if p == 2 else 'int32')
                     assert int(res.triangles) == want, (name, backend, p)
                     assert not bool(res.transpose_overflow), (name, backend, p)
                     assert not bool(res.hedge_overflow), (name, backend, p)

@@ -157,3 +157,37 @@ def test_sampler_shapes_and_edges_valid():
             assert (int(nodes_np[d]), int(nodes_np[s])) in real
             checked += 1
     assert checked > 0
+
+
+def test_rmat_rejects_invalid_probabilities():
+    """Regression: a=0.9, b=0.3, c=0.3 (sum 1.5) used to silently
+    generate a graph from a nonsense distribution (c_norm > 1)."""
+    with pytest.raises(ValueError, match="rmat probabilities"):
+        gen.rmat(5, 4, a=0.9, b=0.3, c=0.3)
+    for bad in (dict(a=-0.1), dict(b=-0.2), dict(c=1.01),
+                dict(a=0.5, b=0.5, c=0.1)):
+        with pytest.raises(ValueError):
+            gen.rmat(5, 4, **bad)
+    # the Graph500 defaults and valid corners still generate
+    edges, n = gen.rmat(5, 4, seed=1)
+    assert n == 32 and edges.shape == (128, 2)
+    for corner in (dict(a=1.0, b=0.0, c=0.0), dict(a=0.0, b=0.0, c=0.0),
+                   dict(a=0.0, b=0.0, c=1.0)):
+        edges, n = gen.rmat(4, 2, **corner)
+        assert edges.shape == (32, 2) and edges.max() < n
+
+
+def test_budget_grid_top_cell():
+    """A capped grid routes: cells at/below the cap fit, anything whose
+    rounded cell exceeds it raises from budget_for but answers fits()."""
+    from repro.graph.csr import BudgetGrid
+
+    grid = BudgetGrid(max_nodes=256, max_slots=1024)
+    assert grid.fits(256, 512)
+    assert grid.budget_for(200, 300).n_budget == 256
+    assert not grid.fits(257, 10)     # node cell would round to 512
+    assert not grid.fits(10, 513)     # slot cell would round to 2048
+    with pytest.raises(ValueError, match="top cell"):
+        grid.budget_for(257, 10)
+    unbounded = BudgetGrid()
+    assert unbounded.fits(1 << 20, 1 << 22)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bfs import UNVISITED, bfs_levels
-from repro.core.edges import horizontal_mask
+from repro.core.edges import classify_edges, horizontal_mask
 from repro.core.sequential import find_triangles, triangle_count
 from repro.core.wedge_baseline import wedge_count, wedge_triangle_count
 from repro.graph import generators as gen
@@ -97,6 +97,38 @@ def test_find_triangles_unique_and_valid():
         assert key not in seen, "duplicate triangle"
         seen.add(key)
         assert v in adj[u] and v in adj[w] and w in adj[u]
+
+
+def test_classify_edges_unvisited_not_horizontal():
+    """Regression: an edge between two UNVISITED vertices has equal
+    levels, but is class 0 (unreached), not class 1 (horizontal) —
+    ``classify_edges`` must apply the same ``!= UNVISITED`` guard as
+    ``horizontal_mask``.  Repro: a single-root BFS of ``0-1, 2-3`` that
+    never reached the second component."""
+    edges = np.asarray([[0, 1], [2, 3]], dtype=np.int64)
+    n = 4
+    g = from_edges(edges, n)
+    # levels as a single-root, no-reseed BFS from 0 would leave them
+    level = jnp.asarray([0, 1, UNVISITED, UNVISITED], jnp.int32)
+    cls = np.asarray(classify_edges(g.src, g.dst, level, n))
+    h = np.asarray(horizontal_mask(g.src, g.dst, level, n))
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    in_23 = (src >= 2) & (src < n)
+    assert (cls[in_23] == 0).all(), "unvisited-unvisited edges are class 0"
+    assert not h[in_23].any()
+    # both functions agree on what is horizontal, slot for slot
+    assert ((cls == 1) == h).all()
+    # the reached component still classifies: 0-1 is adjacent-level
+    in_01 = (src < 2)
+    assert (cls[in_01] == 2).all()
+
+
+def test_classify_matches_horizontal_mask_after_full_bfs(named_graph):
+    name, edges, n, g = named_graph
+    level = bfs_levels(g.src, g.dst, n, root=0)
+    cls = np.asarray(classify_edges(g.src, g.dst, level, n))
+    h = np.asarray(horizontal_mask(g.src, g.dst, level, n))
+    assert ((cls == 1) == h).all(), name
 
 
 def test_disconnected_components():
