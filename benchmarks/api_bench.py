@@ -1,0 +1,84 @@
+"""Facade-overhead accounting: the ``TriangleEngine`` front door must
+cost (nearly) nothing over the raw pipeline it fronts.
+
+``measure_api`` times the scale-10 RMAT fixture through (a) the direct
+impl path (``core.sequential._triangle_count`` + the result syncs a
+served response would force) and (b) ``TriangleEngine.count`` (typed
+options, routing, the full ``TriangleReport`` device_get), interleaved
+with alternating order, and asserts the facade overhead stays under the
+5% acceptance bound.  The comparison uses per-side minima — both sides
+run the SAME jitted program, so the minimum isolates the facade's own
+host cost from GC/allocator noise (run-to-run jitter on a busy process
+is ±25%, far above the effect being bounded).  Writes
+``results/BENCH_api.json`` so the overhead is tracked across PRs like
+the other BENCH_* trajectories.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.api import TriangleEngine
+from repro.core import sequential as seq
+from repro.graph import generators as gen
+from repro.graph.csr import from_edges
+
+OVERHEAD_BOUND = 0.05
+
+
+def measure_api(
+    scale: int = 10,
+    repeats: int = 15,
+    seed: int = 0,
+    out: str | None = None,
+) -> dict:
+    edges, n = gen.rmat(scale, 16, seed=seed)
+    g = from_edges(edges, n)
+    engine = TriangleEngine()
+    opts = engine.options
+
+    def direct() -> int:
+        r = seq._triangle_count(g, opts)
+        return int(r.triangles) + int(0 * float(r.k))  # the response syncs
+
+    def facade() -> int:
+        return engine.count(g, route="local").triangles
+
+    want = direct()
+    assert facade() == want  # warm both; same count or the bench lies
+    d_s, f_s = [], []
+    for i in range(repeats):  # interleaved, alternating order: drift and
+        #   ordering effects hit both sides alike
+        pair = ((direct, d_s), (facade, f_s))
+        for fn, sink in (pair if i % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            fn()
+            sink.append(time.perf_counter() - t0)
+    direct_s = min(d_s)
+    engine_s = min(f_s)
+    overhead = engine_s / direct_s - 1.0
+    row = {
+        "scale": scale,
+        "repeats": repeats,
+        "triangles": want,
+        "direct_ms": direct_s * 1e3,
+        "engine_ms": engine_s * 1e3,
+        "overhead_frac": overhead,
+        "bound": OVERHEAD_BOUND,
+        "pass": overhead < OVERHEAD_BOUND,
+    }
+    print(f"api_direct,{direct_s * 1e6:.0f},T={want}")
+    print(f"api_engine,{engine_s * 1e6:.0f},"
+          f"overhead={overhead * 100:.2f}%|bound={OVERHEAD_BOUND:.0%}"
+          f"|pass={row['pass']}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"api_json,0,written={os.path.normpath(out)}")
+    assert row["pass"], (
+        f"TriangleEngine facade overhead {overhead:.1%} exceeds "
+        f"{OVERHEAD_BOUND:.0%} vs the direct pipeline"
+    )
+    return row

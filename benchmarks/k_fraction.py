@@ -6,18 +6,19 @@ from __future__ import annotations
 
 import time
 
-from repro.core.sequential import triangle_count
+from repro.api import TCOptions, default_engine
 from repro.graph import generators as gen
 from repro.graph.csr import from_edges, max_degree
 
 
 def measure(scales=(10, 11, 12, 13), seed: int = 0):
     rows = []
+    engine = default_engine()
     for scale in scales:
         edges, n = gen.rmat(scale, 16, seed=seed)
         g = from_edges(edges, n)
         t0 = time.time()
-        res = triangle_count(g, d_max=max_degree(g))
+        res = engine.count_raw(g, options=TCOptions(d_max=max_degree(g)))
         res.triangles.block_until_ready()
         dt = time.time() - t0
         rows.append({

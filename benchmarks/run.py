@@ -17,6 +17,9 @@ no argument runs everything.
               one-graph-per-call loop on a mixed request stream:
               throughput vs batch size, p50/p99 latency, plan-cache and
               jit-cache behavior; writes ``results/BENCH_serve.json``
+  api      -> TriangleEngine facade overhead vs the direct pipeline on
+              the scale-10 fixture (must stay < 5%); writes
+              ``results/BENCH_api.json``
   comm     -> measured vs modeled communication per phase for
               p in {1, 2, 4, 8} on scale-10/12 RMAT (subprocess, 8 host
               devices) + the k·m·p hedge-volume scaling curve; writes
@@ -151,6 +154,16 @@ def bench_serve():
     measure_serve(num_requests=96, batch_sizes=(1, 2, 8, 16), out=out)
 
 
+def bench_api():
+    """Facade-overhead smoke: ``repro.api.TriangleEngine.count`` vs the
+    direct pipeline on scale-10 RMAT — asserts the < 5% acceptance bound
+    and writes ``results/BENCH_api.json``."""
+    from benchmarks.api_bench import measure_api
+
+    out = os.path.join(_ROOT, "results", "BENCH_api.json")
+    measure_api(scale=10, out=out)
+
+
 def bench_roofline():
     from benchmarks.roofline import RESULTS, analyze
 
@@ -174,6 +187,7 @@ BENCHES = {
     "tc": bench_tc,
     "parallel": bench_parallel,
     "serve": bench_serve,
+    "api": bench_api,
     "comm": bench_comm,
     "comm_smoke": lambda: bench_comm(smoke=True),
     "roofline": bench_roofline,

@@ -12,7 +12,8 @@ import time
 
 import jax
 
-from repro.core.sequential import triangle_count, triangle_count_dense
+from repro.api import TCOptions, default_engine
+from repro.core.sequential import triangle_count_dense
 from repro.core.wedge_baseline import wedge_count, wedge_triangle_count
 from repro.graph import generators as gen
 from repro.graph.csr import from_edges, max_degree
@@ -35,7 +36,9 @@ def measure(scale: int = 11, seed: int = 0, *, backend: str = "auto",
     edges, n = gen.rmat(scale, 16, seed=seed)
     g = from_edges(edges, n)
     dm = max_degree(g)
-    t_cover, res = _time(lambda: triangle_count(g, intersect_backend=backend))
+    engine = default_engine()
+    opts = TCOptions(backend=backend)
+    t_cover, res = _time(lambda: engine.count_raw(g, options=opts))
     t_dense = (
         _time(lambda: triangle_count_dense(g, d_max=dm))[0] if dense else None
     )
@@ -88,10 +91,7 @@ def measure_parallel(scale: int = 10, p: int = 8, seed: int = 0, *,
 
     from repro.core.bfs import bfs_levels
     from repro.core.edges import horizontal_queries
-    from repro.core.parallel_tc import (
-        parallel_triangle_count, plan_hedge_rounds,
-    )
-    from repro.core.sequential import triangle_count
+    from repro.core.parallel_tc import plan_hedge_rounds
     from repro.core.wedge_baseline import parallel_wedge_triangle_count
     from jax.sharding import Mesh
 
@@ -101,15 +101,17 @@ def measure_parallel(scale: int = 10, p: int = 8, seed: int = 0, *,
     g = from_edges(edges, n)
     m = int(g.n_edges_dir) // 2
 
+    engine = default_engine()
     times, res = {}, None
     for mode in ("allgather", "ring"):
         times[mode], res = _time(
-            lambda mode=mode: parallel_triangle_count(
-                g, mesh, mode=mode, hedge_chunk=hedge_chunk
+            lambda mode=mode: engine.count_distributed_raw(
+                g, mesh=mesh,
+                options=TCOptions(mode=mode, hedge_chunk=hedge_chunk),
             ),
             n=2,
         )
-    seq = triangle_count(g)
+    seq = engine.count_raw(g)
     wres = parallel_wedge_triangle_count(g, mesh)
 
     # measured bucket occupancy: the horizontal queries every device

@@ -1,11 +1,12 @@
 """Distributed cover-edge triangle counting (the paper's Algorithm 2) on
-8 simulated devices, vs the wedge-query baseline it replaces.
+8 simulated devices, vs the wedge-query baseline it replaces — driven
+through the ``TriangleEngine`` front door's distributed route.
 
 Algorithm 2's per-device probing runs through the shared intersection
 engine: ``plan_hedge_rounds`` lays out static degree buckets on the host
 (from the graph's degree histogram, valid for any BFS) and every round
 executes that plan against the transposed pair lists — the same
-plan/run split ``triangle_count`` uses (DESIGN.md §3).
+plan/run split the local route uses (DESIGN.md §3).
 
     PYTHONPATH=src python examples/distributed_tc.py
 """
@@ -17,10 +18,9 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
+from repro.api import TCOptions, TriangleEngine  # noqa: E402
 from repro.core import comm_model as cm  # noqa: E402
-from repro.core.parallel_tc import (  # noqa: E402
-    parallel_triangle_count, plan_hedge_rounds,
-)
+from repro.core.parallel_tc import plan_hedge_rounds  # noqa: E402
 from repro.core.wedge_baseline import (  # noqa: E402
     parallel_wedge_triangle_count, wedge_count,
 )
@@ -38,6 +38,10 @@ def main():
     # hedge_chunk is both the fori-loop probe slice and the bucket-row
     # granularity — without it the whole per-round buffer is one bucket
     chunk = 512
+    engine = TriangleEngine(
+        TCOptions(mode="ring", hedge_chunk=chunk, backend="auto"),
+        mesh=mesh,
+    )
     plan = plan_hedge_rounds(g, p, mode="ring", hedge_chunk=chunk)
     print(f"RMAT scale 11: n={n} m={m}")
     print("planned horizontal rounds (one engine bucket per line):")
@@ -45,38 +49,40 @@ def main():
         print(f"  rows={b.rows:>6}  candidate width={b.d_cand:>4}  "
               f"target width={b.d_targ}")
 
-    res = parallel_triangle_count(g, mesh, mode="ring", hedge_chunk=chunk,
-                                  intersect_backend="auto")
+    rep = engine.count(g, route="distributed")
     wres = parallel_wedge_triangle_count(g, mesh)
-    print(f"cover-edge (ring): T={int(res.triangles)}  k={float(res.k):.3f}"
-          f"  per-device={np.asarray(res.per_device).tolist()}")
-    print(f"  measured horizontal fraction k = {float(res.k):.3f} "
-          f"({int(res.num_horizontal)} of {m} undirected edges)")
-    print(f"  overflow flags: transpose={bool(res.transpose_overflow)} "
-          f"hedge={bool(res.hedge_overflow)} (static capacities held)")
+    print(f"cover-edge (ring): T={rep.triangles}  k={rep.k:.3f}"
+          f"  per-device={rep.per_device.tolist()}")
+    print(f"  measured horizontal fraction k = {rep.k:.3f} "
+          f"({rep.num_horizontal} of {m} undirected edges)")
+    print(f"  overflow flags: transpose={rep.overflow.transpose} "
+          f"hedge={rep.overflow.hedge} (static capacities held)")
+    print(f"  unified report: route={rep.route} plan={rep.plan_id} "
+          f"c1={rep.c1} c2={rep.c2} (Alg 2 has no apex-level split)")
     print(f"wedge baseline:    T={int(wres.triangles)}  "
           f"wedges routed={int(wres.wedges_routed)}")
 
-    new = cm.cover_edge_comm(n, m, float(res.k), p).total_bytes
+    new = cm.cover_edge_comm(n, m, rep.k, p).total_bytes
     old = cm.wedge_comm_bits(float(wedge_count(g)), n) / 8
     print(f"\nmodelled comm: wedge={cm.fmt_bytes(old)} "
           f"cover-edge={cm.fmt_bytes(new)} -> {old/new:.1f}x reduction")
 
-    # the measured loop (DESIGN.md §5): every run carries its CommTally,
-    # and the instrument's per-collective extraction must match it
+    # the measured loop (DESIGN.md §5): every distributed report carries
+    # its CommTally, and the instrument's per-collective extraction must
+    # match it
     from repro.core import comm_instrument as ci
 
-    tally = res.comm.phase_bytes()
-    sweeps = int(jax.device_get(res.comm.bfs_sweeps))
-    rep = ci.comm_report(n, int(g.n_edges_dir), p, sweeps=sweeps,
-                         mode="ring", hedge_chunk=chunk)
+    tally = rep.comm.phase_bytes()
+    sweeps = int(jax.device_get(rep.comm.bfs_sweeps))
+    repm = ci.comm_report(n, int(g.n_edges_dir), p, sweeps=sweeps,
+                          mode="ring", hedge_chunk=chunk)
     print(f"\nmeasured wire bytes (ring, p={p}, {sweeps} BFS sweeps):")
-    for ph, row in rep["phases"].items():
+    for ph, row in repm["phases"].items():
         agree = "==" if row["measured"] == tally[ph] else "!="
         print(f"  {ph:>9}: measured={row['measured']:>10} {agree} "
               f"tally={tally[ph]:>10}  modeled={row['modeled']:.0f}")
     assert all(r["measured"] == tally[ph]
-               for ph, r in rep["phases"].items())
+               for ph, r in repm["phases"].items())
 
 
 if __name__ == "__main__":

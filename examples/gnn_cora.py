@@ -9,10 +9,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.api import TriangleEngine
 from repro.configs.data import gnn_batch
 from repro.configs.registry import arch_module
-from repro.core.sequential import triangle_count
-from repro.graph.csr import from_edges, max_degree
+from repro.graph.csr import from_edges
 from repro.launch import steps as steps_mod
 from repro.train.optimizer import OptConfig, opt_init
 
@@ -28,12 +28,12 @@ def main():
     g = from_edges(
         np.stack([np.asarray(batch.src), np.asarray(batch.dst)], 1), 300
     )
-    res = triangle_count(g, d_max=max_degree(g))
-    levels = res.levels.astype(jnp.float32)[:, None] / 10.0
+    rep = TriangleEngine().count(g)
+    levels = jnp.asarray(rep.levels, jnp.float32)[:, None] / 10.0
     batch = dataclasses.replace(
         batch, node_feat=jnp.concatenate([batch.node_feat, levels], axis=1)
     )
-    print(f"graph triangles: {int(res.triangles)}  k={float(res.k):.3f}")
+    print(f"graph triangles: {rep.triangles}  k={rep.k:.3f}")
 
     params = steps_mod.init_for("gat-cora", cfg, jax.random.key(0))
     opt_cfg = OptConfig(lr=5e-3, warmup=5, total_steps=100)

@@ -1,53 +1,54 @@
-"""Quickstart: cover-edge triangle counting (the paper's Algorithm 1).
+"""Quickstart: cover-edge triangle counting through the one front door
+(`repro.api.TriangleEngine` — Algorithm 1 under the hood).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import networkx as nx
 import numpy as np
 
-from repro.core.sequential import (
-    find_triangles,
-    triangle_count,
-    triangle_count_batch,
-)
+from repro.api import TriangleEngine
 from repro.graph import generators as gen
-from repro.graph.csr import from_edges, from_edges_batch, max_degree
+from repro.graph.csr import from_edges
 
 
 def main():
+    engine = TriangleEngine()
     for name, (edges, n) in {
         "karate": gen.karate(),
         "dolphins-like (62 vertices)": gen.dolphins_like(),
         "Graph500 RMAT scale 10": gen.rmat(10, 16, seed=0),
     }.items():
-        g = from_edges(edges, n)
-        res = triangle_count(g, d_max=max_degree(g))
+        rep = engine.count((edges, n))  # Graph objects work too
         G = nx.Graph()
         G.add_nodes_from(range(n))
         G.add_edges_from(np.asarray(edges))
         G.remove_edges_from(nx.selfloop_edges(G))
         want = sum(nx.triangles(G).values()) // 3
         print(f"{name}:")
-        print(f"  triangles = {int(res.triangles)} (networkx: {want})")
-        print(f"  horizontal-edge fraction k = {float(res.k):.3f}")
-        print(f"  c1 (apex off-level) = {int(res.c1)}, "
-              f"c2 (all-same-level, triple-counted) = {int(res.c2)}")
-    # triangle FINDING on karate
+        print(f"  triangles = {rep.triangles} (networkx: {want})")
+        print(f"  horizontal-edge fraction k = {rep.k:.3f}")
+        print(f"  c1 (apex off-level) = {rep.c1}, "
+              f"c2 (all-same-level, triple-counted) = {rep.c2}")
+        print(f"  provenance: route={rep.route} backend={rep.backend} "
+              f"plan={rep.plan_id}")
+    # triangle FINDING on karate — same engine, same options
     edges, n = gen.karate()
     g = from_edges(edges, n)
-    tri, cnt = find_triangles(g, d_max=max_degree(g), max_triangles=64)
+    tri, cnt = engine.find(g, max_triangles=64)
     print(f"\nfirst 5 of {int(cnt)} karate triangles: "
           f"{np.asarray(tri)[:5].tolist()}")
     # BATCHED counting: many small query graphs in one call (one shared
-    # static budget, one plan, one vmapped program — see DESIGN.md §4)
+    # static budget, one cached plan, one vmapped program — DESIGN.md §4;
+    # the engine owns the budget grid and the plan cache)
     batch = [gen.karate(), gen.complete(9),
              gen.erdos_renyi(60, 0.1, seed=1)]
-    gb = from_edges_batch(batch)
-    res = triangle_count_batch(gb)
-    print(f"\nGraphBatch of {gb.batch_size} on budget {gb.budget}:")
-    for i in range(gb.batch_size):
-        print(f"  lane {i}: n={int(gb.n_nodes[i])} "
-              f"triangles={int(res.triangles[i])} k={float(res.k[i]):.3f}")
+    reports = engine.count_batch(batch)
+    print(f"\ncount_batch of {len(batch)} graphs "
+          f"(plan {reports[0].plan_id}):")
+    for i, rep in enumerate(reports):
+        print(f"  graph {i}: n={batch[i][1]} "
+              f"triangles={rep.triangles} k={rep.k:.3f}")
+    print(f"plan cache: {engine.plan_cache_stats()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,650 @@
+"""One front door for cover-edge triangle counting.
+
+The paper presents ONE algorithm family — sequential Algorithm 1 and the
+communication-efficient parallel Algorithm 2 — and this module exposes it
+through ONE typed surface (DESIGN.md §6):
+
+* :class:`TCOptions` — every execution knob of every route in a single
+  frozen, hashable dataclass, validated in one place.  The plan-relevant
+  subset (:meth:`TCOptions.plan_view`) is the bounded-plan cache key.
+* :class:`TriangleEngine` — owns routing (``auto`` | ``local`` | ``batch``
+  | ``distributed``), the bounded-plan cache, the budget grid, and the
+  lazily-built device mesh.  Methods: :meth:`~TriangleEngine.count`,
+  :meth:`~TriangleEngine.count_batch`, :meth:`~TriangleEngine.find`,
+  :meth:`~TriangleEngine.serve`.
+* :class:`TriangleReport` — the unified result contract: ``triangles``
+  and ``k`` always present; ``c1``/``c2`` are ``None`` on the distributed
+  route (Algorithm 2 counts each triangle exactly once, without the
+  apex-level split — no ``-1`` sentinel); every capacity flag normalized
+  into one :class:`Overflow` struct; provenance (route taken, plan id,
+  resolved backend, the run's ``CommTally`` when distributed).
+
+The historical entry points (``core.sequential.triangle_count`` /
+``triangle_count_batch`` / ``find_triangles`` and
+``core.parallel_tc.parallel_triangle_count``) remain available as thin
+deprecation shims over this engine with bit-identical outputs.
+
+    from repro.api import TriangleEngine
+
+    engine = TriangleEngine()
+    report = engine.count((edges, n_nodes))   # or a packed Graph
+    print(report.triangles, report.k, report.route)
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core import parallel_tc as _ptc
+from repro.core import sequential as _seq
+from repro.core.comm_instrument import CommTally, choose_hedge_mode
+from repro.core.intersect import (
+    DEFAULT_BUCKET_WIDTHS,
+    IntersectPlan,
+    resolve_backend,
+)
+from repro.graph.csr import (
+    DEFAULT_BUDGET_GRID,
+    BudgetGrid,
+    Graph,
+    GraphBatch,
+    from_edges,
+    from_edges_batch,
+)
+
+__all__ = [
+    "ROUTES",
+    "Overflow",
+    "TCOptions",
+    "TriangleEngine",
+    "TriangleReport",
+    "default_engine",
+]
+
+#: The engine's dispatch targets.  ``auto`` resolves per call: requests
+#: whose grid cell fits the engine's ``BudgetGrid`` run locally (a
+#: single lane, or the server's batched queue), everything larger goes
+#: to the distributed Algorithm 2 backend — the one policy that used to
+#: live inside ``TriangleServer.submit``.
+ROUTES = ("auto", "local", "batch", "distributed")
+
+_BACKENDS = ("auto", "jnp", "pallas")
+_HEDGE_MODES = ("auto", "allgather", "ring")
+_FRONTIER_DTYPES = ("int32", "uint8")
+
+#: edge-list input: ``(edges int[any, 2], n_nodes)``
+EdgeList = tuple  # noqa: UP006 — runtime-friendly alias, see _as_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class TCOptions:
+    """Every execution knob of every route, in one frozen hashable place.
+
+    Shared engine knobs
+      backend:        ``"auto" | "jnp" | "pallas"`` intersection backend
+                      (``auto`` = Pallas on real TPU, jnp elsewhere).
+      interpret:      Pallas interpret override; ``None`` auto-selects.
+      bucket_widths:  degree-bucket boundaries of the intersection plans.
+      query_chunk:    fori-loop probe-chunk rows (bounds peak memory);
+                      also overrides ``row_mult`` when set.
+      row_mult:       bucket-row quantization of bounded plans.
+
+    Local / batch route knobs (Algorithm 1)
+      d_max:          lossy candidate-width clamp (``None`` = exact).
+      cap_h:          cap on the compacted horizontal-query block.
+      root:           BFS root.
+      compact:        ``False`` = the dense seed reference path.
+
+    Distributed route knobs (Algorithm 2)
+      mode:           hedge exchange — ``"auto"`` picks allgather vs ring
+                      by live-buffer size (``choose_hedge_mode``).
+      slack:          transpose sample-sort capacity slack.
+      d_pad:          adjacency pad width (``None`` = graph max degree).
+      hedge_chunk:    per-round probe slice / bucket granularity.
+      frontier_dtype: BFS frontier wire dtype (``"uint8"`` = 4x fewer
+                      BFS bytes per sweep).
+      gather_buffer_limit_bytes: allgather live-buffer bound for
+                      ``mode="auto"``.
+
+    Routing policy
+      route:          default dispatch of ``TriangleEngine.count`` —
+                      one of :data:`ROUTES`.
+    """
+
+    # -- shared engine knobs ------------------------------------------
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+    bucket_widths: tuple = DEFAULT_BUCKET_WIDTHS
+    query_chunk: Optional[int] = None
+    row_mult: int = 64
+    # -- local / batch route (Algorithm 1) ----------------------------
+    d_max: Optional[int] = None
+    cap_h: Optional[int] = None
+    root: int = 0
+    compact: bool = True
+    # -- distributed route (Algorithm 2) ------------------------------
+    mode: str = "auto"
+    slack: float = 4.0
+    d_pad: Optional[int] = None
+    hedge_chunk: Optional[int] = None
+    frontier_dtype: str = "int32"
+    gather_buffer_limit_bytes: int = 64 << 20
+    # -- routing policy -----------------------------------------------
+    route: str = "auto"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "bucket_widths",
+            tuple(int(w) for w in self.bucket_widths),
+        )
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"backend must be one of {_BACKENDS}; got {self.backend!r}"
+            )
+        if self.mode not in _HEDGE_MODES:
+            raise ValueError(
+                f"mode must be one of {_HEDGE_MODES}; got {self.mode!r}"
+            )
+        if self.frontier_dtype not in _FRONTIER_DTYPES:
+            raise ValueError(
+                f"frontier_dtype must be one of {_FRONTIER_DTYPES}; "
+                f"got {self.frontier_dtype!r}"
+            )
+        if self.route not in ROUTES:
+            raise ValueError(
+                f"route must be one of {ROUTES}; got {self.route!r}"
+            )
+        for name in ("query_chunk", "d_max", "cap_h", "d_pad",
+                     "hedge_chunk"):
+            v = getattr(self, name)
+            if v is not None and int(v) <= 0:
+                raise ValueError(f"{name} must be positive; got {v}")
+        if any(w <= 0 for w in self.bucket_widths):
+            raise ValueError(
+                f"bucket_widths must be positive; got {self.bucket_widths}"
+            )
+        if self.row_mult <= 0:
+            raise ValueError(f"row_mult must be positive; got {self.row_mult}")
+        if self.slack <= 0:
+            raise ValueError(f"slack must be positive; got {self.slack}")
+        if self.gather_buffer_limit_bytes <= 0:
+            raise ValueError("gather_buffer_limit_bytes must be positive")
+
+    def resolved(self) -> "TCOptions":
+        """``backend``/``interpret`` resolved against the current device
+        platform (``auto``/``None`` eliminated)."""
+        backend, interpret = resolve_backend(self.backend, self.interpret)
+        return dataclasses.replace(self, backend=backend, interpret=interpret)
+
+    def plan_view(self) -> "TCOptions":
+        """The canonical plan-relevant projection: backend/interpret
+        resolved, ``row_mult`` folded to ``query_chunk`` when chunking
+        (bucket rows must be a chunk multiple), every field that cannot
+        change a bounded plan reset to its default.  Two option sets that
+        lay out the same plan project to the SAME value — this is the
+        bounded-plan cache key (``core.sequential.batch_plan_for``)."""
+        r = self.resolved()
+        return TCOptions(
+            backend=r.backend,
+            interpret=r.interpret,
+            bucket_widths=r.bucket_widths,
+            query_chunk=r.query_chunk,
+            row_mult=int(r.query_chunk) if r.query_chunk else r.row_mult,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Overflow:
+    """Every way a count can be less than exact, normalized into one
+    struct — each flag marks the result invalid rather than silently
+    wrong (the engine-wide contract).
+
+    ``h``: horizontal queries dropped (``cap_h``), or a width clamp /
+    violated bucket bound truncated candidate lists (local and batch
+    routes).  ``transpose`` / ``hedge``: Algorithm 2's sample-sort and
+    horizontal-edge-buffer capacity flags (distributed route).
+    """
+
+    h: bool = False
+    transpose: bool = False
+    hedge: bool = False
+
+    @property
+    def any(self) -> bool:
+        return self.h or self.transpose or self.hedge
+
+    def __bool__(self) -> bool:  # `if report.overflow:` reads naturally
+        return self.any
+
+
+@dataclasses.dataclass(frozen=True)
+class TriangleReport:
+    """The unified result contract of every route.
+
+    Always present: ``triangles``, ``k`` (measured horizontal-edge
+    fraction), ``num_horizontal``, ``overflow``, and the provenance
+    fields (``route``, ``backend``, ``plan_id``, ``options``).
+
+    Route-dependent: ``c1``/``c2`` (the apex-level split — ``None`` on
+    the distributed route, which counts each triangle exactly once
+    without the split; there is NO ``-1`` sentinel), ``levels`` (BFS
+    levels; local/batch only), ``comm`` (measured per-phase wire bytes)
+    and ``per_device`` (per-device partial counts) — distributed only.
+    """
+
+    triangles: int
+    k: float
+    num_horizontal: int
+    c1: Optional[int]
+    c2: Optional[int]
+    overflow: Overflow
+    # -- provenance ---------------------------------------------------
+    route: str            # the route that actually answered
+    backend: str          # resolved intersection backend
+    plan_id: str          # human-readable intersection-plan descriptor
+    options: TCOptions    # the options the run executed with
+    # -- route-dependent payloads -------------------------------------
+    levels: Optional[np.ndarray] = None
+    comm: Optional[CommTally] = None
+    per_device: Optional[np.ndarray] = None
+
+
+def _plan_id(plan: IntersectPlan, kind: str) -> str:
+    """Stable human-readable provenance tag for an intersection plan."""
+    shape = "+".join(f"{b.rows}x{b.d_cand}" for b in plan.buckets) or "empty"
+    return f"{kind}/{plan.backend}/{shape}"
+
+
+def _as_graph(graph_or_edges) -> Graph:
+    """Accept a packed ``Graph`` or an ``(edges, n_nodes)`` pair."""
+    if isinstance(graph_or_edges, Graph):
+        return graph_or_edges
+    if isinstance(graph_or_edges, GraphBatch):
+        raise TypeError(
+            "count() takes one graph; use count_batch() for a GraphBatch"
+        )
+    edges, n_nodes = graph_or_edges
+    return from_edges(np.asarray(edges), int(n_nodes))
+
+
+def _host_edges(g: Graph) -> tuple[np.ndarray, int]:
+    """Pull a graph's unique undirected edges back to the host (the
+    batch route re-packs onto a budget-grid cell)."""
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    keep = (src < dst) & (dst < g.n_nodes)
+    return np.stack([src[keep], dst[keep]], axis=1), g.n_nodes
+
+
+class TriangleEngine:
+    """The facade: one object that owns routing, planning, budgets and
+    the mesh, in front of both of the paper's algorithms.
+
+    Args:
+      options: default :class:`TCOptions` for every call (per-call
+        overrides via the ``options=`` / ``route=`` parameters).
+      budgets: the :class:`BudgetGrid` used by the ``batch`` route and
+        by ``auto`` routing (its top cell is the local/distributed
+        boundary).  ``None`` = the module default grid.
+      mesh: device mesh for the distributed route; ``None`` lazily
+        builds a 1-D mesh over every local device on first use.
+    """
+
+    def __init__(
+        self,
+        options: Optional[TCOptions] = None,
+        *,
+        budgets: Optional[BudgetGrid] = None,
+        mesh=None,
+    ):
+        if options is not None and not isinstance(options, TCOptions):
+            raise TypeError(
+                f"options must be a TCOptions, got {type(options).__name__}"
+            )
+        self.options = options or TCOptions()
+        self.budgets = budgets or DEFAULT_BUDGET_GRID
+        self._mesh = mesh
+        self._plan_cache: dict = {}
+        self._plan_stats = {"hits": 0, "misses": 0}
+
+    # ------------------------------------------------------------ mesh
+    @property
+    def mesh(self):
+        """The distributed route's mesh (built lazily over every local
+        device so purely-local engines never touch the device topology)."""
+        if self._mesh is None:
+            from jax.sharding import Mesh
+
+            devs = np.array(jax.devices())
+            self._mesh = Mesh(devs.reshape(devs.size), ("p",))
+        return self._mesh
+
+    # --------------------------------------------------------- routing
+    def route_for(
+        self, n_nodes: int, n_edges_und: int, *, route: Optional[str] = None
+    ) -> str:
+        """Resolve ``auto`` for a request of this size: ``local`` while
+        the request's grid cell fits the budget grid's top cell,
+        ``distributed`` beyond — THE over-budget dispatch policy (the
+        serving layer and ``count`` both call exactly this)."""
+        r = route or self.options.route
+        if r not in ROUTES:
+            raise ValueError(f"route must be one of {ROUTES}; got {r!r}")
+        if r != "auto":
+            return r
+        fits = self.budgets.fits(int(n_nodes), int(n_edges_und))
+        return "local" if fits else "distributed"
+
+    # -------------------------------------------------------- planning
+    def plan_for(self, gb: GraphBatch) -> IntersectPlan:
+        """The engine-owned bounded-plan cache, keyed on
+        ``(budget, meta, options.plan_view())``."""
+        return _seq.batch_plan_for(
+            gb, options=self.options,
+            cache=self._plan_cache, stats=self._plan_stats,
+        )
+
+    def plan_cache_stats(self, reset: bool = False) -> dict:
+        """``{"hits", "misses", "size"}`` of this engine's plan cache."""
+        out = dict(self._plan_stats, size=len(self._plan_cache))
+        if reset:
+            self._plan_stats.update(hits=0, misses=0)
+        return out
+
+    # ------------------------------------------------- raw-result API
+    # The legacy entry points are deprecation shims over these: same
+    # code paths as count()/count_batch()/find(), returning the legacy
+    # device-array result types bit-for-bit.
+
+    def count_raw(
+        self, g: Graph, *, options: Optional[TCOptions] = None
+    ) -> "_seq.TCResult":
+        """Local (Algorithm 1) count returning the raw ``TCResult``."""
+        return _seq._triangle_count(g, options or self.options)
+
+    def count_batch_raw(
+        self,
+        gb: GraphBatch,
+        *,
+        options: Optional[TCOptions] = None,
+        plan: Optional[IntersectPlan] = None,
+    ) -> "_seq.TCResult":
+        """Batched count returning the raw lane-axis ``TCResult``."""
+        return _seq._triangle_count_batch(gb, options or self.options,
+                                          plan=plan)
+
+    def find_raw(
+        self,
+        g: Graph,
+        *,
+        max_triangles: int,
+        options: Optional[TCOptions] = None,
+    ):
+        """Triangle finding: ``(tri int32[max_triangles, 3], count)``."""
+        return _seq._find_triangles(g, options or self.options,
+                                    max_triangles=int(max_triangles))
+
+    def count_distributed_raw(
+        self,
+        g: Graph,
+        *,
+        mesh=None,
+        axis_name: str = "p",
+        options: Optional[TCOptions] = None,
+    ) -> "_ptc.ParallelTCResult":
+        """Distributed (Algorithm 2) count returning the raw
+        ``ParallelTCResult``.  Resolves ``mode="auto"`` here — the hedge
+        exchange choice is routing policy, and policy lives in the
+        engine."""
+        o = options or self.options
+        mesh = mesh if mesh is not None else self.mesh
+        o = self._resolve_hedge_mode(g, mesh, axis_name, o)
+        return _ptc._parallel_triangle_count(g, mesh, axis_name=axis_name,
+                                             options=o)
+
+    def _resolve_hedge_mode(
+        self, g: Graph, mesh, axis_name: str, o: TCOptions
+    ) -> TCOptions:
+        """``mode="auto"`` -> allgather vs ring by live gathered-buffer
+        size (``choose_hedge_mode``, DESIGN.md §5)."""
+        if o.mode != "auto":
+            return o
+        m2 = int(jax.device_get(g.n_edges_dir))
+        return dataclasses.replace(o, mode=choose_hedge_mode(
+            m2, mesh.shape[axis_name],
+            gather_buffer_limit_bytes=o.gather_buffer_limit_bytes,
+            slack=o.slack,
+        ))
+
+    # ------------------------------------------------------ public API
+    def count(
+        self,
+        graph_or_edges: Union[Graph, EdgeList],
+        *,
+        route: Optional[str] = None,
+        options: Optional[TCOptions] = None,
+    ) -> TriangleReport:
+        """Count the triangles of one graph — a packed :class:`Graph` or
+        an ``(edges, n_nodes)`` pair — on the resolved route.
+
+        ``local`` runs the graph at its own static shape; ``batch``
+        rounds it onto the engine's budget grid and runs the cached-plan
+        fused batch pipeline (the serving hot path — repeated same-scale
+        traffic never replans or recompiles); ``distributed`` runs
+        Algorithm 2 over the engine's mesh.  ``auto`` picks local vs
+        distributed by the budget grid's top cell (``route_for``).
+        Triangles and k are bit-identical across routes.
+
+        Degenerate n=0 graphs are answered at the facade on every route
+        (the pipelines index into empty arrays); such a report carries
+        the resolved route and its contract (``c1``/``c2`` ``None`` on
+        distributed) but no ``comm``/``per_device`` — nothing ran.
+        """
+        o = options or self.options
+        if isinstance(graph_or_edges, GraphBatch):
+            raise TypeError(
+                "count() takes one graph; use count_batch() for a "
+                "GraphBatch"
+            )
+        is_graph = isinstance(graph_or_edges, Graph)
+        if is_graph:
+            g, edges = graph_or_edges, None
+            n_nodes = g.n_nodes
+        else:
+            edges, n_nodes = graph_or_edges
+            g, edges, n_nodes = None, np.asarray(edges), int(n_nodes)
+        m_und = 0
+        if (route or o.route) == "auto":
+            # the routing size: for an edge list, its (pre-dedup) row
+            # count — exactly what the serving layer routes on; for a
+            # packed Graph, num_slots/2 is a cheap upper bound (fits =>
+            # the graph fits), refined to the true edge count only when
+            # slot padding would spuriously overflow the grid
+            if is_graph:
+                m_und = g.num_slots // 2
+                if not self.budgets.fits(n_nodes, m_und):
+                    m_und = int(jax.device_get(g.n_edges_dir)) // 2
+            elif edges.size:
+                m_und = edges.reshape(-1, 2).shape[0]
+        r = self.route_for(n_nodes, m_und, route=route)
+        if r == "batch" and (o.d_max is not None or o.cap_h is not None):
+            raise ValueError(
+                "route='batch' uses cached bounded plans; d_max/cap_h "
+                "only apply to the local route's exact planning"
+            )
+        if n_nodes == 0:
+            backend, _ = resolve_backend(o.backend, o.interpret)
+            dist = r == "distributed"
+            return TriangleReport(
+                triangles=0, k=0.0, num_horizontal=0,
+                c1=None if dist else 0, c2=None if dist else 0,
+                overflow=Overflow(), route=r, backend=backend,
+                plan_id="empty", options=o,
+                levels=None if dist else np.zeros((0,), np.int32),
+            )
+        if r == "batch":
+            # pack the RAW edges once (a Graph input round-trips to the
+            # host; an edge-list input never builds the intermediate CSR)
+            gb = from_edges_batch(
+                [_host_edges(g) if is_graph else (edges, n_nodes)],
+                grid=self.budgets,
+            )
+            plan = self.plan_for(gb)
+            res = self.count_batch_raw(gb, options=o, plan=plan)
+            res = _seq._squeeze_lane(res)
+            return self._report_local(res, o, route="batch",
+                                      plan_id=_plan_id(plan, "bounded"))
+        if g is None:
+            g = from_edges(edges, n_nodes)
+        if r == "local":
+            res = self.count_raw(g, options=o)
+            return self._report_local(res, o, route="local", plan_id=None)
+        if r == "distributed":
+            # resolve the hedge mode BEFORE building the report so the
+            # provenance (options.mode, plan_id) records the mode that ran
+            o = self._resolve_hedge_mode(g, self.mesh, "p", o)
+            res = self.count_distributed_raw(g, options=o)
+            return self._report_distributed(res, o)
+        raise ValueError(f"unroutable request (route={r!r})")
+
+    def count_batch(
+        self,
+        graphs: Union[GraphBatch, Sequence],
+        *,
+        options: Optional[TCOptions] = None,
+    ) -> list:
+        """Count every graph of a batch — a packed :class:`GraphBatch`
+        or a sequence of ``(edges, n_nodes)`` pairs (packed here onto
+        the engine's budget grid) — returning one
+        :class:`TriangleReport` per real graph.
+
+        Batches packed with degree metadata run the sync-free cached
+        bounded plan (one fused jit, the serving path); metadata-less
+        batches fall back to the exact two-stage path.  Lane results are
+        bit-identical to ``count(..., route="local")`` per graph.
+        """
+        o = options or self.options
+        if isinstance(graphs, GraphBatch):
+            gb, n_real = graphs, graphs.batch_size
+        else:
+            graphs = list(graphs)
+            gb = from_edges_batch(
+                [(np.asarray(e), int(n)) for e, n in graphs],
+                grid=self.budgets,
+            )
+            n_real = len(graphs)
+        plan = None
+        can_plan = (gb.meta is not None and o.d_max is None
+                    and o.cap_h is None)
+        if can_plan:
+            plan = self.plan_for(gb)
+        res = self.count_batch_raw(gb, options=o, plan=plan)
+        backend, _ = resolve_backend(o.backend, o.interpret)
+        pid = (_plan_id(plan, "bounded") if plan is not None
+               else f"exact/{backend}")
+        tri, c1, c2, nh, k, ovf, lev = jax.device_get(
+            (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
+             res.h_overflow, res.levels)
+        )
+        return [
+            TriangleReport(
+                triangles=int(tri[i]), k=float(k[i]),
+                num_horizontal=int(nh[i]),
+                c1=int(c1[i]), c2=int(c2[i]),
+                overflow=Overflow(h=bool(ovf[i])),
+                route="batch", backend=backend, plan_id=pid, options=o,
+                levels=np.asarray(lev[i]),
+            )
+            for i in range(n_real)
+        ]
+
+    def find(
+        self,
+        graph_or_edges: Union[Graph, EdgeList],
+        *,
+        max_triangles: int,
+        options: Optional[TCOptions] = None,
+    ):
+        """Triangle *finding* (local route): the triangles themselves,
+        ``(tri int32[max_triangles, 3], count)``; rows past ``count``
+        are ``-1``.  Same pipeline, same options, as ``count``."""
+        return self.find_raw(_as_graph(graph_or_edges),
+                             max_triangles=max_triangles, options=options)
+
+    def serve(self, *, batch_size: int = 8, max_inflight: int = 8):
+        """A :class:`~repro.launch.serve_tc.TriangleServer` wired to
+        THIS engine: its budget grid buckets the queues, its plan cache
+        feeds every flush, its mesh answers over-budget requests, and
+        its options govern every lane."""
+        from repro.launch.serve_tc import TriangleServer
+
+        return TriangleServer(engine=self, batch_size=batch_size,
+                              max_inflight=max_inflight)
+
+    # -------------------------------------------------- report builders
+    def _report_local(
+        self,
+        res: "_seq.TCResult",
+        o: TCOptions,
+        *,
+        route: str,
+        plan_id: Optional[str],
+    ) -> TriangleReport:
+        tri, c1, c2, nh, k, ovf, lev = jax.device_get(
+            (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
+             res.h_overflow, res.levels)
+        )
+        backend, _ = resolve_backend(o.backend, o.interpret)
+        plan_id = plan_id or f"exact/{backend}"
+        return TriangleReport(
+            triangles=int(tri), k=float(k), num_horizontal=int(nh),
+            c1=int(c1), c2=int(c2), overflow=Overflow(h=bool(ovf)),
+            route=route, backend=backend, plan_id=plan_id, options=o,
+            levels=np.asarray(lev),
+        )
+
+    def _report_distributed(
+        self, res: "_ptc.ParallelTCResult", o: TCOptions
+    ) -> TriangleReport:
+        tri, nh, k, t_ovf, h_ovf, pd = jax.device_get(
+            (res.triangles, res.num_horizontal, res.k,
+             res.transpose_overflow, res.hedge_overflow, res.per_device)
+        )
+        backend, _ = resolve_backend(o.backend, o.interpret)
+        p = pd.shape[0]
+        return TriangleReport(
+            triangles=int(tri), k=float(k), num_horizontal=int(nh),
+            c1=None, c2=None,  # Alg 2 has no apex-level split — no sentinel
+            overflow=Overflow(transpose=bool(t_ovf), hedge=bool(h_ovf)),
+            route="distributed", backend=backend,
+            plan_id=f"hedge/{o.mode}/p{p}", options=o,
+            comm=res.comm, per_device=np.asarray(pd),
+        )
+
+
+# ------------------------------------------------------- default engine
+
+_DEFAULT_ENGINE: Optional[TriangleEngine] = None
+
+
+def default_engine() -> TriangleEngine:
+    """The process-wide default engine (default options, default grid,
+    lazy all-device mesh) — what the legacy deprecation shims run on."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = TriangleEngine()
+    return _DEFAULT_ENGINE
+
+
+def _warn_shim(old: str, new: str) -> None:
+    """The legacy entry points' deprecation notice (they keep working,
+    bit-identically, as shims over the default engine)."""
+    warnings.warn(
+        f"{old}() is deprecated; call repro.api.{new} on a TriangleEngine "
+        "instead (the legacy entry point remains a bit-identical shim)",
+        DeprecationWarning,
+        stacklevel=3,
+    )

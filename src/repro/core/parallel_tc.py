@@ -367,28 +367,22 @@ def build_tc_shard_fn(
     return fn, cap_edges
 
 
-def parallel_triangle_count(
-    g: Graph,
-    mesh: Mesh,
-    *,
-    axis_name: str = "p",
-    root: int = 0,
-    slack: float = 4.0,
-    d_pad: int | None = None,
-    mode: str = "allgather",
-    hedge_chunk: int | None = None,
-    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
-    intersect_backend: str = "auto",
-    interpret: bool | None = None,
-    frontier_dtype: str = "int32",
+def _parallel_triangle_count(
+    g: Graph, mesh: Mesh, *, axis_name: str = "p", options
 ) -> ParallelTCResult:
-    """Count triangles of ``g`` on every device of ``mesh``'s ``axis_name``
-    axis (the paper's p processors), probing through the shared
-    intersection engine (``intersect_backend`` as in ``triangle_count``).
-    ``frontier_dtype`` is the BFS frontier exchange's wire dtype
-    (``"uint8"`` moves 4x fewer BFS bytes per sweep — visible in the
-    result's ``comm`` tally)."""
-    backend, interpret = resolve_backend(intersect_backend, interpret)
+    """Algorithm 2 impl — ``options`` is a ``repro.api.TCOptions`` with
+    ``mode`` already resolved to ``"allgather"`` or ``"ring"`` (the
+    ``"auto"`` hedge-mode policy lives in the engine,
+    ``TriangleEngine.count_distributed_raw``)."""
+    o = options
+    if o.mode not in ("allgather", "ring"):
+        raise ValueError(
+            f"hedge mode must be resolved before the impl; got {o.mode!r}"
+        )
+    backend, interpret = resolve_backend(o.backend, o.interpret)
+    root, slack, mode = int(o.root), float(o.slack), o.mode
+    hedge_chunk, bucket_widths = o.hedge_chunk, o.bucket_widths
+    frontier_dtype, d_pad = o.frontier_dtype, o.d_pad
     p = mesh.shape[axis_name]
     m2 = int(jax.device_get(g.n_edges_dir))
     if d_pad is None:
@@ -422,3 +416,44 @@ def parallel_triangle_count(
     s_dev = jax.device_put(jnp.asarray(s_sh.reshape(-1)), sharding)
     d_dev = jax.device_put(jnp.asarray(d_sh.reshape(-1)), sharding)
     return jax.jit(shard)(s_dev, d_dev)
+
+
+def parallel_triangle_count(
+    g: Graph,
+    mesh: Mesh,
+    *,
+    axis_name: str = "p",
+    root: int = 0,
+    slack: float = 4.0,
+    d_pad: int | None = None,
+    mode: str = "allgather",
+    hedge_chunk: int | None = None,
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    intersect_backend: str = "auto",
+    interpret: bool | None = None,
+    frontier_dtype: str = "int32",
+) -> ParallelTCResult:
+    """DEPRECATED shim — use ``repro.api.TriangleEngine.count`` with
+    ``route="distributed"`` (or ``count_distributed_raw`` for this raw
+    result type).
+
+    Count triangles of ``g`` on every device of ``mesh``'s ``axis_name``
+    axis (the paper's p processors), probing through the shared
+    intersection engine (``intersect_backend`` as in ``triangle_count``).
+    ``frontier_dtype`` is the BFS frontier exchange's wire dtype
+    (``"uint8"`` moves 4x fewer BFS bytes per sweep — visible in the
+    result's ``comm`` tally)."""
+    from repro import api
+
+    api._warn_shim(
+        "parallel_triangle_count", "TriangleEngine.count_distributed_raw"
+    )
+    o = api.TCOptions(
+        backend=intersect_backend, interpret=interpret,
+        bucket_widths=tuple(int(w) for w in bucket_widths),
+        root=root, mode=mode, slack=slack, d_pad=d_pad,
+        hedge_chunk=hedge_chunk, frontier_dtype=frontier_dtype,
+    )
+    return api.default_engine().count_distributed_raw(
+        g, mesh=mesh, axis_name=axis_name, options=o
+    )

@@ -25,12 +25,19 @@ same executor:
   runs BFS + compaction + probing as a single fused jit per batch with
   zero host round-trips.
 
-``triangle_count`` / ``find_triangles`` are thin B=1 wrappers over the
-same code path (``to_batch`` is an ``expand_dims``, not a repack), so
-the single-graph results — including ``probe_rows``/``probe_cells``
+The single-graph path (``_triangle_count``) is a thin B=1 wrapper over
+the same code path (``to_batch`` is an ``expand_dims``, not a repack),
+so the single-graph results — including ``probe_rows``/``probe_cells``
 work accounting — are bit-identical to the pre-batch pipeline.
 Algorithm 2 (``core/parallel_tc.py``) executes the same engine against
 its transposed pair lists.
+
+Since PR 5 the public way in is ``repro.api.TriangleEngine`` (typed
+``TCOptions``, unified ``TriangleReport``, routing); the impls here
+(``_triangle_count`` / ``_triangle_count_batch`` / ``_find_triangles``)
+take a ``TCOptions`` directly, and the historical entry points
+(``triangle_count`` / ``triangle_count_batch`` / ``find_triangles``)
+remain as bit-identical ``DeprecationWarning`` shims over the engine.
 
 * ``triangle_count_dense`` / ``find_triangles_dense`` — the seed
   single-jit reference: every directed edge slot probed at the global
@@ -192,11 +199,14 @@ _BATCH_PLAN_STATS = {"hits": 0, "misses": 0}
 def batch_plan_for(
     gb: GraphBatch,
     *,
+    options=None,
     intersect_backend: str = "auto",
     bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
     interpret: bool | None = None,
     query_chunk: int | None = None,
     row_mult: int = 64,
+    cache: dict | None = None,
+    stats: dict | None = None,
 ) -> IntersectPlan:
     """Sync-free bounded plan for a packed batch, memoized host-side.
 
@@ -204,43 +214,51 @@ def batch_plan_for(
     quantized ``BatchDegreeMeta`` (true upper bounds on every lane's
     horizontal-query degree profile, known at pack time — no BFS, no
     device round-trip), so it is exact: no lane can overflow its bucket.
-    The cache key is ``(budget, meta, bucket_widths, backend, interpret,
-    query_chunk, row_mult)`` — metadata quantization (``META_ROW_QUANT``,
-    pow2 ``d_pad``) is what makes same-scale traffic collide onto the
-    same key, skip planning entirely, and share one fused jit entry.
-    ``batch_plan_cache_stats`` reports hit rates for the serving layer.
+    The cache key is ``(budget, meta, options.plan_view())`` — the
+    typed ``repro.api.TCOptions`` projection of the plan-relevant knobs
+    (``options`` directly, or one built from the legacy kwargs);
+    metadata quantization (``META_ROW_QUANT``, pow2 ``d_pad``) is what
+    makes same-scale traffic collide onto the same key, skip planning
+    entirely, and share one fused jit entry.  ``cache``/``stats`` let a
+    ``TriangleEngine`` own its plan cache; the module-global default
+    (reported by ``batch_plan_cache_stats``) serves legacy callers.
     """
-    backend, interpret = resolve_backend(intersect_backend, interpret)
+    from repro.api import TCOptions  # deferred: api imports this module
+
+    if options is None:
+        options = TCOptions(
+            backend=intersect_backend,
+            bucket_widths=tuple(int(w) for w in bucket_widths),
+            interpret=interpret, query_chunk=query_chunk,
+            row_mult=int(row_mult),
+        )
+    key_opts = options.plan_view()
     if gb.meta is None:
         raise ValueError(
             "GraphBatch carries no degree metadata; pack it with "
             "from_edges_batch(with_meta=True) or plan exact "
             "(triangle_count_batch(gb) without a plan)"
         )
-    if query_chunk:
-        # bucket rows must be a chunk multiple for run_plan's fori slicing
-        row_mult = int(query_chunk)
-    key = (
-        gb.budget, gb.meta, tuple(int(w) for w in bucket_widths),
-        backend, interpret, query_chunk, int(row_mult),
-    )
-    plan = _BATCH_PLAN_CACHE.get(key)
+    cache = _BATCH_PLAN_CACHE if cache is None else cache
+    stats = _BATCH_PLAN_STATS if stats is None else stats
+    key = (gb.budget, gb.meta, key_opts)
+    plan = cache.get(key)
     if plan is None:
-        _BATCH_PLAN_STATS["misses"] += 1
+        stats["misses"] += 1
         plan = plan_buckets_bounded(
             gb.meta.h_rows,
             d_pad=gb.meta.d_pad,
             exceed=gb.meta.exceed,
-            bucket_widths=tuple(int(w) for w in bucket_widths),
-            row_mult=int(row_mult),
-            backend=backend,
-            interpret=interpret,
-            query_chunk=query_chunk,
+            bucket_widths=key_opts.bucket_widths,
+            row_mult=key_opts.row_mult,
+            backend=key_opts.backend,
+            interpret=key_opts.interpret,
+            query_chunk=key_opts.query_chunk,
             sort_queries=False,  # lanes arrive desc-sorted from compaction
         )
-        _BATCH_PLAN_CACHE[key] = plan
+        cache[key] = plan
     else:
-        _BATCH_PLAN_STATS["hits"] += 1
+        stats["hits"] += 1
     return plan
 
 
@@ -250,6 +268,50 @@ def batch_plan_cache_stats(reset: bool = False) -> dict:
     if reset:
         _BATCH_PLAN_STATS.update(hits=0, misses=0)
     return out
+
+
+def _triangle_count_batch(
+    gb: GraphBatch, o, *, plan: IntersectPlan | None = None
+) -> TCResult:
+    """Batched count impl — ``o`` is a ``repro.api.TCOptions`` (every
+    knob validated there, in one place).  See ``triangle_count_batch``
+    for the semantics; the engine (``repro.api.TriangleEngine``) and the
+    legacy shim both execute exactly this."""
+    backend, interpret = resolve_backend(o.backend, o.interpret)
+    gview = gb.lane_view()
+    root = int(o.root)
+    if plan is not None:
+        if o.d_max is not None or o.cap_h is not None:
+            raise ValueError(
+                "d_max/cap_h only apply to exact planning; a precomputed "
+                "plan fixes coverage and widths"
+            )
+        level, n_h, k, eng = _tc_batch_fused(gview, plan, root)
+        # coverage is the plan's contract: a lane with more horizontal
+        # queries than the plan probes must flag, not silently undercount
+        # (can't happen with a plan from THIS batch's true-bound meta,
+        # but the plan= parameter is public and plans get reused)
+        h_ovf = (n_h > plan.total_rows) | eng.overflow
+    else:
+        row_mult = int(o.query_chunk) if o.query_chunk else o.row_mult
+        level, qu, qw, n_h, k, h_used, _, plan = _exact_batch_plan(
+            gview, root, o.cap_h, o.bucket_widths, o.d_max, row_mult,
+            backend, interpret, o.query_chunk,
+        )
+        eng = _run_batch(gview, qu, qw, level, plan)
+        h_ovf = (n_h > h_used) | eng.overflow
+    return TCResult(
+        triangles=eng.c1 + eng.c2 // 3,
+        c1=eng.c1,
+        c2=eng.c2,
+        num_horizontal=n_h,
+        k=k,
+        levels=level,
+        probe_rows=jnp.asarray(plan.probe_rows, jnp.int32),
+        probe_cells=jnp.asarray(plan.probe_cells, jnp.float32),
+        peak_rows=jnp.asarray(plan.peak_rows, jnp.int32),
+        h_overflow=h_ovf,
+    )
 
 
 def triangle_count_batch(
@@ -264,7 +326,9 @@ def triangle_count_batch(
     query_chunk: int | None = None,
     interpret: bool | None = None,
 ) -> TCResult:
-    """Cover-edge triangle count of every lane of a ``GraphBatch``.
+    """DEPRECATED shim — use ``repro.api.TriangleEngine.count_batch``.
+
+    Cover-edge triangle count of every lane of a ``GraphBatch``.
 
     All ``TCResult`` array fields gain a leading batch axis (``levels``
     is ``[B, n_budget]``); the plan-derived work accounting
@@ -284,40 +348,15 @@ def triangle_count_batch(
     (impossible under true-bound plans, flagged rather than miscounted
     otherwise).
     """
-    backend, interpret = resolve_backend(intersect_backend, interpret)
-    gview = gb.lane_view()
-    if plan is not None:
-        if d_max is not None or cap_h is not None:
-            raise ValueError(
-                "d_max/cap_h only apply to exact planning; a precomputed "
-                "plan fixes coverage and widths"
-            )
-        level, n_h, k, eng = _tc_batch_fused(gview, plan, root)
-        # coverage is the plan's contract: a lane with more horizontal
-        # queries than the plan probes must flag, not silently undercount
-        # (can't happen with a plan from THIS batch's true-bound meta,
-        # but the plan= parameter is public and plans get reused)
-        h_ovf = (n_h > plan.total_rows) | eng.overflow
-    else:
-        row_mult = int(query_chunk) if query_chunk else 64
-        level, qu, qw, n_h, k, h_used, _, plan = _exact_batch_plan(
-            gview, root, cap_h, bucket_widths, d_max, row_mult, backend,
-            interpret, query_chunk,
-        )
-        eng = _run_batch(gview, qu, qw, level, plan)
-        h_ovf = (n_h > h_used) | eng.overflow
-    return TCResult(
-        triangles=eng.c1 + eng.c2 // 3,
-        c1=eng.c1,
-        c2=eng.c2,
-        num_horizontal=n_h,
-        k=k,
-        levels=level,
-        probe_rows=jnp.asarray(plan.probe_rows, jnp.int32),
-        probe_cells=jnp.asarray(plan.probe_cells, jnp.float32),
-        peak_rows=jnp.asarray(plan.peak_rows, jnp.int32),
-        h_overflow=h_ovf,
+    from repro import api
+
+    api._warn_shim("triangle_count_batch", "TriangleEngine.count_batch")
+    o = api.TCOptions(
+        backend=intersect_backend, interpret=interpret,
+        bucket_widths=tuple(int(w) for w in bucket_widths),
+        query_chunk=query_chunk, d_max=d_max, cap_h=cap_h, root=root,
     )
+    return api.default_engine().count_batch_raw(gb, options=o, plan=plan)
 
 
 def _squeeze_lane(res: TCResult) -> TCResult:
@@ -332,6 +371,19 @@ def _squeeze_lane(res: TCResult) -> TCResult:
     )
 
 
+def _triangle_count(g: Graph, o) -> TCResult:
+    """Single-graph count impl — ``o`` is a ``repro.api.TCOptions``.
+    A thin B=1 wrapper over ``_triangle_count_batch`` (the graph rides
+    the batched engine as a single lane; ``to_batch`` adds the lane axis
+    without repacking), so counts AND work accounting are bit-identical
+    to the batch path's lane results.  ``o.compact=False`` falls back to
+    the dense seed reference."""
+    if not o.compact:
+        dm = o.d_max if o.d_max is not None else max(1, max_degree(g))
+        return triangle_count_dense(g, d_max=dm, root=int(o.root))
+    return _squeeze_lane(_triangle_count_batch(to_batch(g), o))
+
+
 def triangle_count(
     g: Graph,
     *,
@@ -344,7 +396,9 @@ def triangle_count(
     interpret: bool | None = None,
     compact: bool = True,
 ) -> TCResult:
-    """Cover-edge triangle count via the compacted, degree-bucketed
+    """DEPRECATED shim — use ``repro.api.TriangleEngine.count``.
+
+    Cover-edge triangle count via the compacted, degree-bucketed
     pipeline.
 
     Args:
@@ -374,21 +428,21 @@ def triangle_count(
       compact: ``False`` falls back to the dense seed reference
         (``triangle_count_dense``; jnp only).
 
-    This is a thin B=1 wrapper over ``triangle_count_batch`` (the graph
+    This is a thin B=1 wrapper over the batched pipeline (the graph
     rides the batched engine as a single lane; ``to_batch`` adds the
     lane axis without repacking), so counts AND work accounting are
     bit-identical to the batch path's lane results.
     """
-    backend, interpret = resolve_backend(intersect_backend, interpret)
-    if not compact:
-        dm = d_max if d_max is not None else max(1, max_degree(g))
-        return triangle_count_dense(g, d_max=dm, root=root)
-    res = triangle_count_batch(
-        to_batch(g), root=root, intersect_backend=backend,
-        bucket_widths=bucket_widths, d_max=d_max, cap_h=cap_h,
-        query_chunk=query_chunk, interpret=interpret,
+    from repro import api
+
+    api._warn_shim("triangle_count", "TriangleEngine.count")
+    o = api.TCOptions(
+        backend=intersect_backend, interpret=interpret,
+        bucket_widths=tuple(int(w) for w in bucket_widths),
+        query_chunk=query_chunk, d_max=d_max, cap_h=cap_h, root=root,
+        compact=compact,
     )
-    return _squeeze_lane(res)
+    return api.default_engine().count_raw(g, options=o)
 
 
 @functools.partial(jax.jit, static_argnames=("d_max", "root"))
@@ -480,39 +534,31 @@ def _find_block(
     return buf[:max_triangles], cnt
 
 
-def find_triangles(
-    g: Graph,
-    *,
-    max_triangles: int,
-    d_max: int | None = None,
-    root: int = 0,
-    intersect_backend: str = "auto",
-    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
-    cap_h: int | None = None,
-    interpret: bool | None = None,
-    compact: bool = True,
-):
-    """Triangle *finding* through the same compacted/bucketed pipeline:
-    returns ``(tri int32[max_triangles, 3], count)``; rows past ``count``
-    (or past the buffer, on overflow) are -1.  Triangles are unique (see
-    ``_emit_mask``); their order depends on the bucket layout.  A
-    ``cap_h`` that drops real horizontal queries truncates the result and
-    raises a ``UserWarning`` (counting surfaces the same condition as
-    ``TCResult.h_overflow``)."""
-    backend, interpret = resolve_backend(intersect_backend, interpret)
-    if not compact:
-        dm = d_max if d_max is not None else max(1, max_degree(g))
+def _find_triangles(g: Graph, o, *, max_triangles: int):
+    """Triangle-finding impl — ``o`` is a ``repro.api.TCOptions``.  See
+    ``find_triangles`` for the semantics.
+
+    ``o.query_chunk`` shapes the bucket layout exactly as in counting
+    (rows quantized to chunk multiples), keeping the plan consistent
+    across an engine's count/find calls — but the finding executor
+    dispatches each bucket's probe whole (``_find_block``), so the
+    peak-memory bound that chunking gives the counting path does not
+    apply here."""
+    backend, interpret = resolve_backend(o.backend, o.interpret)
+    if not o.compact:
+        dm = o.d_max if o.d_max is not None else max(1, max_degree(g))
         return find_triangles_dense(
-            g, d_max=dm, max_triangles=max_triangles, root=root
+            g, d_max=dm, max_triangles=max_triangles, root=int(o.root)
         )
     gview = to_batch(g).lane_view()
+    row_mult = int(o.query_chunk) if o.query_chunk else o.row_mult
     level, qu, qw, _, _, _, h_dropped, plan = _exact_batch_plan(
-        gview, root, cap_h, bucket_widths, d_max, 64, backend, interpret,
-        None,
+        gview, int(o.root), o.cap_h, o.bucket_widths, o.d_max, row_mult,
+        backend, interpret, o.query_chunk,
     )
     if h_dropped:
         warnings.warn(
-            f"find_triangles: cap_h={cap_h} dropped horizontal queries — "
+            f"find_triangles: cap_h={o.cap_h} dropped horizontal queries — "
             "the returned triangle list is incomplete",
             stacklevel=2,
         )
@@ -540,6 +586,40 @@ def find_triangles(
             out[off:off + take] = np.asarray(jax.device_get(tri_b))[:take]
             off += take
     return jnp.asarray(out), jnp.asarray(total, jnp.int32)
+
+
+def find_triangles(
+    g: Graph,
+    *,
+    max_triangles: int,
+    d_max: int | None = None,
+    root: int = 0,
+    intersect_backend: str = "auto",
+    bucket_widths: tuple[int, ...] = DEFAULT_BUCKET_WIDTHS,
+    cap_h: int | None = None,
+    interpret: bool | None = None,
+    compact: bool = True,
+):
+    """DEPRECATED shim — use ``repro.api.TriangleEngine.find``.
+
+    Triangle *finding* through the same compacted/bucketed pipeline:
+    returns ``(tri int32[max_triangles, 3], count)``; rows past ``count``
+    (or past the buffer, on overflow) are -1.  Triangles are unique (see
+    ``_emit_mask``); their order depends on the bucket layout.  A
+    ``cap_h`` that drops real horizontal queries truncates the result and
+    raises a ``UserWarning`` (counting surfaces the same condition as
+    ``TCResult.h_overflow``)."""
+    from repro import api
+
+    api._warn_shim("find_triangles", "TriangleEngine.find")
+    o = api.TCOptions(
+        backend=intersect_backend, interpret=interpret,
+        bucket_widths=tuple(int(w) for w in bucket_widths),
+        d_max=d_max, cap_h=cap_h, root=root, compact=compact,
+    )
+    return api.default_engine().find_raw(
+        g, max_triangles=int(max_triangles), options=o
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("d_max", "max_triangles", "root"))

@@ -90,6 +90,22 @@ def complete(n: int) -> tuple[np.ndarray, int]:
     return np.stack([i, j], axis=1).astype(np.int64), n
 
 
+def path(n: int) -> tuple[np.ndarray, int]:
+    """Path graph 0-1-...-(n-1): zero triangles, and every BFS from an
+    endpoint yields zero horizontal edges (k = 0) — a §V-B degenerate
+    fixture for baseline cross-checks."""
+    i = np.arange(max(0, n - 1), dtype=np.int64)
+    return np.stack([i, i + 1], axis=1), n
+
+
+def star(n: int) -> tuple[np.ndarray, int]:
+    """Star K_{1,n-1} centered on vertex 0: zero triangles; rooted at a
+    leaf, all other leaves land on one level (k = (n-2)/(n-1)) — the
+    opposite horizontal-fraction extreme from ``path``."""
+    leaves = np.arange(1, n, dtype=np.int64)
+    return np.stack([np.zeros_like(leaves), leaves], axis=1), n
+
+
 def ring_of_cliques(n_cliques: int, clique_size: int) -> tuple[np.ndarray, int]:
     """Known count: n_cliques * C(clique_size, 3) triangles."""
     edges = []

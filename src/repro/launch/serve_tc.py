@@ -1,19 +1,21 @@
 """Triangle-analytics serving: the batched cover-edge pipeline as a
 request/response front-end.
 
-The server accepts a stream of edge-list requests (the per-community /
+The server is a batching front-end over a ``repro.api.TriangleEngine``:
+it accepts a stream of edge-list requests (the per-community /
 per-ego-net query shape that motivates cover-edge counting), rounds each
-onto the ``BudgetGrid``'s static-shape cell, assembles fixed-B batches
-per budget, and runs every batch as ONE fused jit — BFS + horizontal
-compaction + planned intersection via
-``core.sequential.triangle_count_batch`` with a cached bounded plan
-(``batch_plan_for``): no host round-trip inside a batch, a bounded
-compile grid across the stream (DESIGN.md §4).
+onto the engine's ``BudgetGrid`` cell, assembles fixed-B batches per
+budget, and runs every batch as ONE fused jit — BFS + horizontal
+compaction + planned intersection with a plan from the engine's cache:
+no host round-trip inside a batch, a bounded compile grid across the
+stream (DESIGN.md §4).
 
 Requests too big for the grid's top cell don't pad a sequential lane to
-an arbitrary static shape — they route to the distributed Algorithm 2
-backend (``core.parallel_tc``) over the device mesh, with the exchange
-mode picked from the analytic hedge-phase volume (DESIGN.md §5).
+an arbitrary static shape — ``engine.route_for`` sends them to the
+distributed Algorithm 2 route over the engine's mesh, with the exchange
+mode picked from the analytic hedge-phase volume (DESIGN.md §5); those
+responses follow the unified ``TriangleReport`` contract (``c1``/``c2``
+= ``None``, full report attached — DESIGN.md §6).
 
   PYTHONPATH=src python -m repro.launch.serve_tc --smoke
   PYTHONPATH=src python -m repro.launch.serve_tc --requests 96 --batch-sizes 1 2 8 16
@@ -36,7 +38,6 @@ from repro.core import sequential as seq
 from repro.core.intersect import DEFAULT_BUCKET_WIDTHS
 from repro.graph import generators as gen
 from repro.graph.csr import (
-    DEFAULT_BUDGET_GRID,
     BudgetGrid,
     ShapeBudget,
     from_edges,
@@ -50,17 +51,19 @@ class TriangleAnalytics:
     plus the latency from submit to batch completion.
 
     ``route`` records which backend answered: ``"batched"`` (a lane of
-    the fused ``triangle_count_batch`` jit) or ``"distributed"`` (an
-    over-budget graph served by Algorithm 2 over the device mesh).  The
-    distributed algorithm counts every triangle exactly once without
-    the c1/c2 apex-level split, so those responses carry ``c1 == c2 ==
-    -1`` (not computed) rather than a fabricated split."""
+    the fused batch jit) or ``"distributed"`` (an over-budget graph
+    served by Algorithm 2 over the device mesh).  The distributed
+    algorithm counts every triangle exactly once without the c1/c2
+    apex-level split, so those responses carry ``c1 is None`` and
+    ``c2 is None`` — the unified ``repro.api.TriangleReport`` contract
+    (the pre-PR-5 ``-1`` sentinel no longer leaks to clients) — plus the
+    full report in ``report`` for provenance (plan id, comm tally)."""
 
     request_id: int
     n_nodes: int
     triangles: int
-    c1: int
-    c2: int
+    c1: Optional[int]
+    c2: Optional[int]
     num_horizontal: int
     k: float
     latency_s: float
@@ -73,6 +76,10 @@ class TriangleAnalytics:
     #: never silently wrong.
     overflow: bool = False
     route: str = "batched"
+    #: the full ``TriangleReport`` on the distributed route (``None`` on
+    #: batched lanes — the hot path stays lean; every field a batched
+    #: response carries is already above)
+    report: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -84,12 +91,21 @@ class _Pending:
 
 
 class TriangleServer:
-    """Budget-bucketed batching front-end over ``triangle_count_batch``.
+    """Budget-bucketed batching front-end over a ``TriangleEngine``.
+
+    Every policy object lives on the engine: its ``BudgetGrid`` buckets
+    the queues AND decides the local/distributed boundary
+    (``engine.route_for`` — the one routing policy), its plan cache
+    feeds every flush, its options govern every lane, and its mesh
+    answers the over-budget requests.  Construct via
+    ``TriangleEngine.serve()`` (or pass ``engine=``); the legacy kwargs
+    (``intersect_backend``/``grid``/``mesh``/...) build a private engine
+    for backward compatibility.
 
     ``submit`` routes a request to its budget's queue and flushes the
     queue as one batch when it reaches ``batch_size``; ``drain`` flushes
     the partial queues.  Each flush dispatches ONE fused jit keyed on
-    ``(budget, lanes, plan)`` — the plan comes from the module-wide
+    ``(budget, lanes, plan)`` — the plan comes from the engine's
     bounded-plan cache, so a repeated traffic mix never replans, never
     resyncs mid-batch, and compiles once per grid cell.
 
@@ -108,41 +124,55 @@ class TriangleServer:
 
     def __init__(
         self,
+        engine=None,
         *,
         batch_size: int = 8,
+        max_inflight: int = 8,
         intersect_backend: str = "auto",
         bucket_widths: Sequence[int] = DEFAULT_BUCKET_WIDTHS,
         grid: Optional[BudgetGrid] = None,
         query_chunk: Optional[int] = None,
         root: int = 0,
-        max_inflight: int = 8,
         mesh=None,
         distributed_mode: str = "auto",
         gather_buffer_limit_bytes: int = 64 << 20,
     ):
+        from repro.api import TCOptions, TriangleEngine
+
+        if engine is None:
+            # legacy kwarg construction: fold every knob into the typed
+            # options and let a private engine own them
+            engine = TriangleEngine(
+                TCOptions(
+                    backend=intersect_backend,
+                    bucket_widths=tuple(int(w) for w in bucket_widths),
+                    query_chunk=query_chunk,
+                    root=root,
+                    mode=distributed_mode,
+                    gather_buffer_limit_bytes=int(gather_buffer_limit_bytes),
+                ),
+                budgets=grid,
+                mesh=mesh,
+            )
+        o = engine.options
+        if o.d_max is not None or o.cap_h is not None:
+            raise ValueError(
+                "serving runs cached bounded plans; d_max/cap_h only "
+                "apply to the local route's exact planning"
+            )
+        self.engine = engine
         self.batch_size = int(batch_size)
-        self.backend = intersect_backend
-        self.bucket_widths = tuple(int(w) for w in bucket_widths)
-        self.grid = grid or DEFAULT_BUDGET_GRID
-        self.query_chunk = query_chunk
-        self.root = int(root)
         self.max_inflight = int(max_inflight)
-        #: device mesh for the distributed route; ``None`` lazily builds
-        #: a 1-D mesh over every local device on first over-budget request
-        self.mesh = mesh
-        #: Algorithm 2 exchange mode for over-budget requests —
-        #: ``"auto"`` picks ring vs allgather per request from the
-        #: analytic hedge-phase volume (``comm_instrument
-        #: .choose_hedge_mode``: same wire total either way, ring's live
-        #: buffer is p x smaller), bounded by ``gather_buffer_limit_bytes``
-        self.distributed_mode = distributed_mode
-        self.gather_buffer_limit_bytes = int(gather_buffer_limit_bytes)
         self._pending: dict[ShapeBudget, list[_Pending]] = defaultdict(list)
         self._inflight: deque = deque()
         self._next_id = 0
         self.results: list[TriangleAnalytics] = []
         self.batches_run = 0
         self.distributed_requests = 0
+
+    @property
+    def grid(self) -> BudgetGrid:
+        return self.engine.budgets
 
     def submit(self, edges: np.ndarray, n_nodes: int) -> int:
         """Enqueue one graph; returns its request id.  Flushes the
@@ -164,7 +194,13 @@ class TriangleServer:
                 f"{int(n_nodes)}); got [{edges.min()}, {edges.max()}]"
             )
         t_submit = time.perf_counter()
-        if not self.grid.fits(int(n_nodes), edges.shape[0]):
+        # the server IS the batch route, so its only dispatch decision is
+        # batch-queue vs distributed: force the size policy (route="auto")
+        # — an engine whose default route is "local"/"batch" must still
+        # have its over-budget requests answered, not crash on budget_for
+        route = self.engine.route_for(int(n_nodes), edges.shape[0],
+                                      route="auto")
+        if route == "distributed":
             self._serve_distributed(rid, edges, int(n_nodes), t_submit)
             return rid
         budget = self.grid.budget_for(int(n_nodes), edges.shape[0])
@@ -177,41 +213,21 @@ class TriangleServer:
     def _serve_distributed(
         self, rid: int, edges: np.ndarray, n_nodes: int, t_submit: float
     ) -> None:
-        """Answer one over-budget request through Algorithm 2 on the
-        device mesh (``core.parallel_tc``) — same response type, same
-        never-silently-wrong overflow contract as the batched lanes.
+        """Answer one over-budget request through the engine's
+        distributed route (Algorithm 2 over the engine's mesh) — same
+        never-silently-wrong overflow contract as the batched lanes,
+        same unified result contract: the response carries ``c1 is
+        None``/``c2 is None`` (Algorithm 2 has no apex-level split; the
+        old ``-1`` sentinel no longer leaks to clients) and the full
+        ``TriangleReport`` for provenance.
 
         The graph keeps its natural (un-budgeted) static shape: each
         distinct over-budget size compiles its own program and plans its
         own hedge buckets, the right trade for rare big-graph traffic —
         the point of the route is answering at all, where a batched lane
         would need an unbounded static budget."""
-        from jax.sharding import Mesh
-
-        from repro.core.comm_instrument import choose_hedge_mode
-        from repro.core.parallel_tc import parallel_triangle_count
-
-        if self.mesh is None:
-            devs = np.array(jax.devices())
-            self.mesh = Mesh(devs.reshape(devs.size), ("p",))
-        p = self.mesh.shape["p"]
         g = from_edges(edges, n_nodes)
-        m2 = int(jax.device_get(g.n_edges_dir))
-        mode = self.distributed_mode
-        if mode == "auto":
-            mode = choose_hedge_mode(
-                m2, p,
-                gather_buffer_limit_bytes=self.gather_buffer_limit_bytes,
-            )
-        res = parallel_triangle_count(
-            g, self.mesh, root=self.root, mode=mode,
-            intersect_backend=self.backend,
-            bucket_widths=self.bucket_widths,
-        )
-        tri, nh, k, t_ovf, h_ovf = jax.device_get(
-            (res.triangles, res.num_horizontal, res.k,
-             res.transpose_overflow, res.hedge_overflow)
-        )
+        report = self.engine.count(g, route="distributed")
         # batches that finished on-device while this (blocking, possibly
         # seconds-long) run held the host must be stamped NOW, not at
         # the next submit — the same attribution rule as host packing
@@ -220,16 +236,17 @@ class TriangleServer:
         self.results.append(TriangleAnalytics(
             request_id=rid,
             n_nodes=n_nodes,
-            triangles=int(tri),
-            c1=-1,
-            c2=-1,
-            num_horizontal=int(nh),
-            k=float(k),
+            triangles=report.triangles,
+            c1=report.c1,   # None — the unified TriangleReport contract
+            c2=report.c2,   # None
+            num_horizontal=report.num_horizontal,
+            k=report.k,
             latency_s=time.perf_counter() - t_submit,
             budget=ShapeBudget(n_budget=g.n_nodes,
                                slot_budget=g.num_slots),
-            overflow=bool(t_ovf) or bool(h_ovf),
+            overflow=report.overflow.any,
             route="distributed",
+            report=report,
         ))
 
     def drain(self) -> list[TriangleAnalytics]:
@@ -256,15 +273,8 @@ class TriangleServer:
             budget=budget,
             batch_size=lanes,
         )
-        plan = seq.batch_plan_for(
-            gb,
-            intersect_backend=self.backend,
-            bucket_widths=self.bucket_widths,
-            query_chunk=self.query_chunk,
-        )
-        res = seq.triangle_count_batch(
-            gb, plan=plan, root=self.root, intersect_backend=self.backend
-        )
+        plan = self.engine.plan_for(gb)
+        res = self.engine.count_batch_raw(gb, plan=plan)
         # res is an in-flight device computation — don't block on it here
         self._inflight.append((reqs, budget, res))
         self.batches_run += 1
@@ -380,11 +390,16 @@ def measure_serve(
     what a non-batching server would do — and each call syncs its result
     (a served response must).  Both sides are warmed on the identical
     request set first, so compiles are excluded from the measured pass.
+    Everything runs on ONE shared ``TriangleEngine`` (its plan cache and
+    compile grid persist across the servers, as a deployment's would).
     Writes the row to ``out`` (``results/BENCH_serve.json``) when given
     and prints the benchmark-harness CSV lines.
     """
+    from repro.api import TCOptions, TriangleEngine
+
+    engine = TriangleEngine(TCOptions(backend=intersect_backend))
     reqs = synth_requests(num_requests, seed=seed, smoke=smoke)
-    grid = DEFAULT_BUDGET_GRID
+    grid = engine.budgets
     budgets = [
         grid.budget_for(n, np.asarray(e).reshape(-1, 2).shape[0])
         for e, n in reqs
@@ -396,7 +411,7 @@ def measure_serve(
         for (e, n), b in zip(reqs, budgets):
             t1 = time.perf_counter()
             g = from_edges(e, b.n_budget, num_slots=b.slot_budget)
-            r = seq.triangle_count(g, intersect_backend=intersect_backend)
+            r = engine.count_raw(g)
             tris.append(int(r.triangles))  # the response forces this sync
             lats.append(time.perf_counter() - t1)
         return time.perf_counter() - t0, lats, tris
@@ -426,21 +441,20 @@ def measure_serve(
           f"|p50_ms={_pct_ms(seq_lats, 50):.2f}|p99_ms={_pct_ms(seq_lats, 99):.2f}")
 
     for B in batch_sizes:
-        kw = dict(batch_size=B, intersect_backend=intersect_backend)
-        warm = TriangleServer(**kw)
+        warm = engine.serve(batch_size=B)
         for e, n in reqs:
             warm.submit(e, n)
         warm.drain()  # compile grid + plan cache now hot
-        seq.batch_plan_cache_stats(reset=True)
+        engine.plan_cache_stats(reset=True)
         jit0 = _jit_cache_size()
-        server = TriangleServer(**kw)
+        server = engine.serve(batch_size=B)
         t0 = time.perf_counter()
         for e, n in reqs:
             server.submit(e, n)
         server.drain()
         wall = time.perf_counter() - t0
         stats = server.summary()
-        plan_stats = seq.batch_plan_cache_stats()
+        plan_stats = engine.plan_cache_stats()
         jit1 = _jit_cache_size()
         total = sum(r.triangles for r in server.results)
         # PER-REQUEST agreement (request ids are the submit order), not a

@@ -183,7 +183,15 @@ def test_serve_routes_over_budget_to_distributed():
         for i in range(len(reqs)):
             assert res[i].triangles == want[i], (i, res[i], want[i])
             assert not res[i].overflow, i
-        assert res[3].route == 'distributed' and res[3].c1 == -1
+        # unified TriangleReport contract: no -1 sentinel — the
+        # distributed route answers with c1/c2 = None + provenance
+        assert res[3].route == 'distributed'
+        assert res[3].c1 is None and res[3].c2 is None
+        assert res[3].report is not None
+        assert res[3].report.route == 'distributed'
+        assert res[3].report.comm is not None
+        batched3 = [r for r in res.values() if r.route == 'batched']
+        assert all(r.c1 is not None and r.c2 is not None for r in batched3)
         assert res[len(reqs) - 1].route == 'distributed'
         batched = [r for r in res.values() if r.route == 'batched']
         assert len(batched) == len(reqs) - 2
