@@ -17,6 +17,12 @@ no argument runs everything.
               one-graph-per-call loop on a mixed request stream:
               throughput vs batch size, p50/p99 latency, plan-cache and
               jit-cache behavior; writes ``results/BENCH_serve.json``
+  robust   -> serving robustness acceptance: deadline-driven continuous
+              batching vs fixed-B flush p99 on a bursty open-loop
+              trace, approximate-lane error bound, and the chaos
+              invariant under fault injection; writes
+              ``results/BENCH_robust.json``.  ``robust_smoke`` is the
+              CI variant (smaller trace, same JSON)
   api      -> TriangleEngine facade overhead vs the direct pipeline on
               the scale-10 fixture (must stay < 5%); writes
               ``results/BENCH_api.json``
@@ -154,6 +160,23 @@ def bench_serve():
     measure_serve(num_requests=96, batch_sizes=(1, 2, 8, 16), out=out)
 
 
+def bench_robust(smoke: bool = False):
+    """Serving robustness acceptance (DESIGN.md §7): deadline-driven
+    continuous batching vs fixed-B flush p99 on a bursty open-loop
+    trace, approximate-lane relative error at the configured sample
+    rate, and the chaos invariant (every request answered exactly once,
+    structurally, under the full fault plan).  Writes
+    ``results/BENCH_robust.json``; a violated claim exits nonzero.
+    ``robust_smoke`` is the CI variant (smaller trace, same JSON)."""
+    from benchmarks.robust_bench import measure_robust
+
+    out = os.path.join(_ROOT, "results", "BENCH_robust.json")
+    if smoke:
+        measure_robust(num_requests=48, smoke=True, out=out)
+    else:
+        measure_robust(num_requests=96, out=out)
+
+
 def bench_api():
     """Facade-overhead smoke: ``repro.api.TriangleEngine.count`` vs the
     direct pipeline on scale-10 RMAT — asserts the < 5% acceptance bound
@@ -187,6 +210,8 @@ BENCHES = {
     "tc": bench_tc,
     "parallel": bench_parallel,
     "serve": bench_serve,
+    "robust": bench_robust,
+    "robust_smoke": lambda: bench_robust(smoke=True),
     "api": bench_api,
     "comm": bench_comm,
     "comm_smoke": lambda: bench_comm(smoke=True),

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import parallel_tc as _ptc
 from repro.core import sequential as _seq
+from repro.core.approx import ApproxEstimate, wedge_sample_estimate
 from repro.core.comm_instrument import CommTally, choose_hedge_mode
 from repro.core.intersect import (
     DEFAULT_BUCKET_WIDTHS,
@@ -58,6 +59,7 @@ from repro.graph.csr import (
 
 __all__ = [
     "ROUTES",
+    "ApproxEstimate",
     "Overflow",
     "TCOptions",
     "TriangleEngine",
@@ -69,8 +71,12 @@ __all__ = [
 #: whose grid cell fits the engine's ``BudgetGrid`` run locally (a
 #: single lane, or the server's batched queue), everything larger goes
 #: to the distributed Algorithm 2 backend — the one policy that used to
-#: live inside ``TriangleServer.submit``.
-ROUTES = ("auto", "local", "batch", "distributed")
+#: live inside ``TriangleServer.submit``.  ``approx`` is the explicit
+#: degraded lane: a host-side wedge-sampled estimate with error bars
+#: (``auto`` never picks it — the serving layer degrades to it only
+#: under overload or after the exact routes failed, and says so in the
+#: report's provenance).
+ROUTES = ("auto", "local", "batch", "distributed", "approx")
 
 _BACKENDS = ("auto", "jnp", "pallas")
 _HEDGE_MODES = ("auto", "allgather", "ring")
@@ -113,6 +119,25 @@ class TCOptions:
     Routing policy
       route:          default dispatch of ``TriangleEngine.count`` —
                       one of :data:`ROUTES`.
+
+    Serving robustness (``launch.serve_tc`` — DESIGN.md §7)
+      deadline_s:     default per-request deadline (relative seconds);
+                      a partially-filled lane flushes when the oldest
+                      pending request's slack drops below the budget's
+                      measured (EWMA) flush cost.  ``None`` = no
+                      deadline — only size/drain flushes (legacy).
+      admission_tokens: bound on pending + in-flight requests per
+                      ``ShapeBudget`` cell; when a cell is full the
+                      server walks the degradation ladder (approx lane,
+                      then shed).  ``None`` = unbounded (legacy).
+      approx_samples: wedge samples of the approximate lane's estimator.
+      approx_on_overload: ``False`` skips the approx rung — overload
+                      and failed requests shed immediately with a
+                      structured rejection.
+      distributed_timeout_s: wall-clock timeout on the blocking
+                      distributed path; a timed-out request retries once
+                      at a smaller hedge buffer, then degrades.
+                      ``None`` = block forever (legacy).
     """
 
     # -- shared engine knobs ------------------------------------------
@@ -135,6 +160,12 @@ class TCOptions:
     gather_buffer_limit_bytes: int = 64 << 20
     # -- routing policy -----------------------------------------------
     route: str = "auto"
+    # -- serving robustness -------------------------------------------
+    deadline_s: Optional[float] = None
+    admission_tokens: Optional[int] = None
+    approx_samples: int = 8192
+    approx_on_overload: bool = True
+    distributed_timeout_s: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -173,6 +204,18 @@ class TCOptions:
             raise ValueError(f"slack must be positive; got {self.slack}")
         if self.gather_buffer_limit_bytes <= 0:
             raise ValueError("gather_buffer_limit_bytes must be positive")
+        for name in ("deadline_s", "distributed_timeout_s"):
+            v = getattr(self, name)
+            if v is not None and float(v) <= 0:
+                raise ValueError(f"{name} must be positive; got {v}")
+        if self.admission_tokens is not None and int(self.admission_tokens) <= 0:
+            raise ValueError(
+                f"admission_tokens must be positive; got {self.admission_tokens}"
+            )
+        if self.approx_samples <= 0:
+            raise ValueError(
+                f"approx_samples must be positive; got {self.approx_samples}"
+            )
 
     def resolved(self) -> "TCOptions":
         """``backend``/``interpret`` resolved against the current device
@@ -230,10 +273,16 @@ class TriangleReport:
     fields (``route``, ``backend``, ``plan_id``, ``options``).
 
     Route-dependent: ``c1``/``c2`` (the apex-level split — ``None`` on
-    the distributed route, which counts each triangle exactly once
-    without the split; there is NO ``-1`` sentinel), ``levels`` (BFS
-    levels; local/batch only), ``comm`` (measured per-phase wire bytes)
-    and ``per_device`` (per-device partial counts) — distributed only.
+    the distributed and approx routes; there is NO ``-1`` sentinel),
+    ``levels`` (BFS levels; local/batch only), ``comm`` (measured
+    per-phase wire bytes) and ``per_device`` (per-device partial
+    counts) — distributed only; ``approx`` (the wedge-sampling
+    :class:`~repro.core.approx.ApproxEstimate` with its error bar) —
+    approx route only.  An approx report's ``triangles`` is the rounded
+    point estimate, its ``k`` is ``NaN`` and ``num_horizontal`` is 0:
+    the estimator never runs the BFS pipeline, and the provenance
+    (``route="approx"``, ``plan_id="wedge-sample/<k>"``, the ``approx``
+    payload) says exactly that.
     """
 
     triangles: int
@@ -251,6 +300,7 @@ class TriangleReport:
     levels: Optional[np.ndarray] = None
     comm: Optional[CommTally] = None
     per_device: Optional[np.ndarray] = None
+    approx: Optional[ApproxEstimate] = None
 
 
 def _plan_id(plan: IntersectPlan, kind: str) -> str:
@@ -309,6 +359,7 @@ class TriangleEngine:
         self._mesh = mesh
         self._plan_cache: dict = {}
         self._plan_stats = {"hits": 0, "misses": 0}
+        self._meta_ceiling: dict = {}  # ShapeBudget -> BatchDegreeMeta
 
     # ------------------------------------------------------------ mesh
     @property
@@ -346,6 +397,27 @@ class TriangleEngine:
             gb, options=self.options,
             cache=self._plan_cache, stats=self._plan_stats,
         )
+
+    def pool_meta(self, budget, meta):
+        """Pool a batch's degree meta up to the engine's per-cell
+        high-water mark and return the pooled meta.
+
+        The plan cache is keyed on the batch's quantized meta, so which
+        requests happen to co-flush decides which plan (and which fused
+        jit entry) a batch lands on — under continuous batching the
+        groupings are timing-dependent, and a novel grouping mid-stream
+        means a novel compile and a latency spike.  Serving flushes
+        route their meta through here instead: the returned ceiling is
+        still a true upper bound (``BatchDegreeMeta.union``), every
+        batch a cell has already covered collides onto ONE plan per
+        lane count, and the compile set stays finite and warmable.  The
+        ceiling only ratchets up (a new per-cell maximum recompiles
+        once, then covers everything beneath it).
+        """
+        prev = self._meta_ceiling.get(budget)
+        pooled = meta if prev is None else prev.union(meta)
+        self._meta_ceiling[budget] = pooled
+        return pooled
 
     def plan_cache_stats(self, reset: bool = False) -> dict:
         """``{"hits", "misses", "size"}`` of this engine's plan cache."""
@@ -477,13 +549,17 @@ class TriangleEngine:
             )
         if n_nodes == 0:
             backend, _ = resolve_backend(o.backend, o.interpret)
-            dist = r == "distributed"
+            no_split = r in ("distributed", "approx")
             return TriangleReport(
                 triangles=0, k=0.0, num_horizontal=0,
-                c1=None if dist else 0, c2=None if dist else 0,
+                c1=None if no_split else 0, c2=None if no_split else 0,
                 overflow=Overflow(), route=r, backend=backend,
                 plan_id="empty", options=o,
-                levels=None if dist else np.zeros((0,), np.int32),
+                levels=None if no_split else np.zeros((0,), np.int32),
+            )
+        if r == "approx":
+            return self.count_approx(
+                (edges, n_nodes) if g is None else g, options=o
             )
         if r == "batch":
             # pack the RAW edges once (a Graph input round-trips to the
@@ -561,6 +637,43 @@ class TriangleEngine:
             for i in range(n_real)
         ]
 
+    def count_approx(
+        self,
+        graph_or_edges: Union[Graph, EdgeList],
+        *,
+        samples: Optional[int] = None,
+        seed: int = 0,
+        options: Optional[TCOptions] = None,
+    ) -> TriangleReport:
+        """The degraded lane: a host-side wedge-sampled estimate
+        (``core.approx``) wrapped in the unified report contract.
+
+        ``triangles`` is the rounded point estimate, ``approx`` carries
+        the full :class:`ApproxEstimate` (stderr, 95% CI), ``k`` is
+        ``NaN`` and ``c1``/``c2`` are ``None`` — nothing about the
+        answer pretends the exact pipeline ran.  Deliberately compile-
+        free: this is what the server answers with when the device
+        pipeline is saturated, failing, or over budget."""
+        o = options or self.options
+        if isinstance(graph_or_edges, Graph):
+            edges, n_nodes = _host_edges(graph_or_edges)
+        else:
+            edges, n_nodes = graph_or_edges
+            edges, n_nodes = np.asarray(edges), int(n_nodes)
+        est = wedge_sample_estimate(
+            edges, n_nodes,
+            samples=int(samples) if samples else o.approx_samples,
+            seed=seed,
+        )
+        backend, _ = resolve_backend(o.backend, o.interpret)
+        return TriangleReport(
+            triangles=int(round(est.triangles)), k=float("nan"),
+            num_horizontal=0, c1=None, c2=None, overflow=Overflow(),
+            route="approx", backend=backend,
+            plan_id=f"wedge-sample/{est.samples}", options=o,
+            approx=est,
+        )
+
     def find(
         self,
         graph_or_edges: Union[Graph, EdgeList],
@@ -574,15 +687,20 @@ class TriangleEngine:
         return self.find_raw(_as_graph(graph_or_edges),
                              max_triangles=max_triangles, options=options)
 
-    def serve(self, *, batch_size: int = 8, max_inflight: int = 8):
+    def serve(self, *, batch_size: int = 8, max_inflight: int = 8,
+              strict: bool = False, faults=None):
         """A :class:`~repro.launch.serve_tc.TriangleServer` wired to
         THIS engine: its budget grid buckets the queues, its plan cache
         feeds every flush, its mesh answers over-budget requests, and
-        its options govern every lane."""
+        its options govern every lane (incl. the deadline / admission /
+        degradation knobs — DESIGN.md §7).  ``strict=True`` restores
+        raise-on-malformed ``submit``; ``faults`` injects a
+        :class:`~repro.launch.robust.FaultPlan` (chaos testing)."""
         from repro.launch.serve_tc import TriangleServer
 
         return TriangleServer(engine=self, batch_size=batch_size,
-                              max_inflight=max_inflight)
+                              max_inflight=max_inflight, strict=strict,
+                              faults=faults)
 
     # -------------------------------------------------- report builders
     def _report_local(

@@ -244,6 +244,24 @@ class BatchDegreeMeta:
     h_rows: int
     exceed: tuple[tuple[int, int], ...]
 
+    def union(self, other: "BatchDegreeMeta") -> "BatchDegreeMeta":
+        """Elementwise max of two metas — a valid upper bound for any
+        batch either one bounds.  The serving layer pools each flush's
+        meta up to a per-cell high-water mark with this, so every batch
+        in a cell shares one plan per lane count (a finite, warmable
+        compile set) instead of one plan per timing-dependent grouping.
+        """
+        if [w for w, _ in self.exceed] != [w for w, _ in other.exceed]:
+            raise ValueError("cannot union metas over different width grids")
+        return BatchDegreeMeta(
+            d_pad=max(self.d_pad, other.d_pad),
+            h_rows=max(self.h_rows, other.h_rows),
+            exceed=tuple(
+                (w, max(c, oc))
+                for (w, c), (_, oc) in zip(self.exceed, other.exceed)
+            ),
+        )
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)

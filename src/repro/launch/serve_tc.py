@@ -17,19 +17,37 @@ mode picked from the analytic hedge-phase volume (DESIGN.md §5); those
 responses follow the unified ``TriangleReport`` contract (``c1``/``c2``
 = ``None``, full report attached — DESIGN.md §6).
 
+Production hardening (DESIGN.md §7): every request can carry a
+*deadline* — a partially-filled lane flushes the moment the oldest
+pending request's slack drops below the budget's measured (EWMA) flush
+cost, so p99 no longer depends on a lucky stream mix filling batches;
+*admission control* bounds pending + in-flight requests per budget cell
+and walks a degradation ladder when a cell is full (queue →
+wedge-sampled approximate answer with error bars → structured shed);
+the blocking distributed path gets a *wall-clock timeout* and one retry
+at a smaller hedge buffer before degrading; and malformed requests come
+back as structured :class:`RejectedRequest` results instead of
+exceptions mid-stream.  The invariant all of it serves: every submitted
+request id receives exactly one structured result — exact, approx, or
+rejected — and ``submit``/``drain`` never raise on bad input or device
+failure (``strict=True`` restores the old raise-on-malformed contract).
+``launch.robust`` supplies the fault-injection plans and the open-loop
+bursty load generator that prove the invariant under chaos.
+
   PYTHONPATH=src python -m repro.launch.serve_tc --smoke
   PYTHONPATH=src python -m repro.launch.serve_tc --requests 96 --batch-sizes 1 2 8 16
 """
 from __future__ import annotations
 
 import argparse
+import concurrent.futures
 import dataclasses
 import json
 import math
 import os
 import time
 from collections import defaultdict, deque
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import numpy as np
@@ -67,7 +85,7 @@ class TriangleAnalytics:
     num_horizontal: int
     k: float
     latency_s: float
-    budget: ShapeBudget
+    budget: Optional[ShapeBudget]
     #: engine width-overflow flag for this lane — False whenever the
     #: bounded plan's bounds were true upper bounds (always, unless a
     #: custom grid/widths setup violates them); True marks the count as
@@ -76,10 +94,45 @@ class TriangleAnalytics:
     #: never silently wrong.
     overflow: bool = False
     route: str = "batched"
-    #: the full ``TriangleReport`` on the distributed route (``None`` on
-    #: batched lanes — the hot path stays lean; every field a batched
-    #: response carries is already above)
+    #: the full ``TriangleReport`` on the distributed and approx routes
+    #: (``None`` on batched lanes — the hot path stays lean; every field
+    #: a batched response carries is already above)
     report: Optional[object] = None
+    #: the wedge-sampling ``ApproxEstimate`` (point estimate, stderr,
+    #: 95% CI) when ``route == "approx"`` — the error bar IS the answer
+    approx: Optional[object] = None
+
+
+@dataclasses.dataclass
+class RejectedRequest:
+    """The shed rung of the degradation ladder — a *structured* answer
+    for a request the server could not serve (malformed input, an
+    admission-full cell with the approx lane disabled, or an exact path
+    that failed beyond retry with no degraded lane left).  Carries the
+    request id so one bad client request never aborts a batch of good
+    ones, and a machine-readable ``reason``:
+
+      ``"malformed"``   — the request never parsed/validated;
+      ``"overloaded"``  — admission control shed it (cell full);
+      ``"failed"``      — every serving rung, exact and degraded, failed.
+    """
+
+    request_id: int
+    reason: str
+    detail: str
+    latency_s: float = 0.0
+    route: str = "rejected"
+
+
+#: everything ``TriangleServer.results`` may hold — exactly one entry
+#: per submitted request id, always
+ServeResult = Union[TriangleAnalytics, RejectedRequest]
+
+
+class FaultInjected(RuntimeError):
+    """A deterministic injected failure (``launch.robust.FaultPlan``) —
+    a distinct type so chaos tests can tell injected faults from real
+    bugs in the recovery paths they exercise."""
 
 
 @dataclasses.dataclass
@@ -88,6 +141,9 @@ class _Pending:
     edges: np.ndarray
     n_nodes: int
     t_submit: float
+    #: absolute ``perf_counter`` deadline (``None`` = no deadline: the
+    #: request only flushes on batch-size or drain, the legacy policy)
+    deadline: Optional[float] = None
 
 
 class TriangleServer:
@@ -120,7 +176,37 @@ class TriangleServer:
       lanes) instead of the full ``batch_size``, so stragglers don't pay
       an 8-lane program for 1 graph.  The compile grid stays bounded:
       budgets x the pow2 ladder up to ``batch_size``.
+
+    Robustness mechanics (all governed by the engine's ``TCOptions``,
+    DESIGN.md §7):
+
+    * **deadline-driven continuous batching** — when a request carries a
+      deadline (per-submit ``deadline_s`` or ``options.deadline_s``),
+      ``_pump_deadlines`` flushes its budget's partial lane as soon as
+      the oldest pending deadline's slack falls below the budget's
+      measured flush cost (an EWMA of recent flush→completion walls),
+      right-sized like drain.  The server is poll-driven, no background
+      thread: ``submit``/``drain`` pump automatically; open-loop drivers
+      call :meth:`pump` between arrivals.
+    * **admission ladder** — with ``options.admission_tokens`` set, a
+      full budget cell degrades the incoming request to the compile-free
+      wedge-sampled approximate lane (``engine.count_approx``, answer
+      with error bars, ``route="approx"``), or sheds it with a
+      :class:`RejectedRequest` when ``approx_on_overload=False``.
+    * **failure degradation** — a flush or fetch that raises (device
+      failure, injected fault) answers every lane of that batch through
+      the same approx-or-shed ladder; the distributed path gets
+      ``options.distributed_timeout_s`` and one retry at a smaller
+      (ring) hedge buffer before degrading.  No exception escapes
+      ``submit``/``drain``; every id is answered exactly once.
     """
+
+    #: flush-cost prior (seconds) used for a budget cell before its
+    #: first measured flush — deliberately conservative so the first
+    #: deadline-carrying request in a cold cell flushes early, not late
+    EWMA_PRIOR_S = 0.05
+    #: EWMA smoothing factor for per-budget flush-cost tracking
+    EWMA_ALPHA = 0.3
 
     def __init__(
         self,
@@ -128,6 +214,8 @@ class TriangleServer:
         *,
         batch_size: int = 8,
         max_inflight: int = 8,
+        strict: bool = False,
+        faults=None,
         intersect_backend: str = "auto",
         bucket_widths: Sequence[int] = DEFAULT_BUCKET_WIDTHS,
         grid: Optional[BudgetGrid] = None,
@@ -163,52 +251,175 @@ class TriangleServer:
         self.engine = engine
         self.batch_size = int(batch_size)
         self.max_inflight = int(max_inflight)
+        self.strict = bool(strict)
+        self.faults = faults
         self._pending: dict[ShapeBudget, list[_Pending]] = defaultdict(list)
         self._inflight: deque = deque()
         self._next_id = 0
-        self.results: list[TriangleAnalytics] = []
+        self.results: list[ServeResult] = []
         self.batches_run = 0
         self.distributed_requests = 0
+        # -- robustness state ------------------------------------------
+        #: pending + in-flight request count per budget cell (the
+        #: admission-control token ledger)
+        self._tokens: dict[ShapeBudget, int] = defaultdict(int)
+        #: measured flush→completion cost per budget cell (EWMA seconds)
+        self._flush_ewma_s: dict[ShapeBudget, float] = {}
+        self.deadline_flushes = 0
+        self.size_flushes = 0
+        self.approx_answers = 0
+        self.rejected_requests = 0
+        self.failed_batches = 0
+        self.distributed_timeouts = 0
+        self.distributed_retries = 0
+        #: distributed calls abandoned after timeout — the computation
+        #: keeps running on its worker thread (a running jax dispatch
+        #: cannot be cancelled); this counts the leak we chose over
+        #: blocking the serving loop
+        self.abandoned_distributed = 0
 
     @property
     def grid(self) -> BudgetGrid:
         return self.engine.budgets
 
-    def submit(self, edges: np.ndarray, n_nodes: int) -> int:
+    def submit(
+        self,
+        edges: np.ndarray,
+        n_nodes: int,
+        *,
+        deadline_s: Optional[float] = None,
+        strict: Optional[bool] = None,
+    ) -> int:
         """Enqueue one graph; returns its request id.  Flushes the
-        budget's batch when full (results land in ``self.results``).
-        Requests over the grid's top cell are answered immediately by
-        the distributed backend instead of a batched lane.
+        budget's batch when full, or earlier when a pending deadline's
+        slack runs out (results land in ``self.results``).  Requests
+        over the grid's top cell are answered immediately by the
+        distributed backend instead of a batched lane.
 
-        Rejects out-of-range node ids outright: the packer's packed-key
-        arithmetic would otherwise silently alias ``id >= n_nodes`` onto
-        fabricated edges — a malformed request must fail loudly, not
-        produce confident analytics for a graph nobody sent."""
+        Malformed input (unparseable edge array, negative ``n_nodes``,
+        out-of-range endpoints — the packer's packed-key arithmetic
+        would silently alias ``id >= n_nodes`` onto fabricated edges)
+        is answered with a structured :class:`RejectedRequest` carrying
+        this request's id, so one bad client request cannot abort a
+        stream of good ones.  ``strict=True`` (per call or server-wide)
+        restores the legacy raise-on-malformed behavior.
+
+        ``deadline_s`` is relative to now; ``None`` falls back to
+        ``options.deadline_s`` (which may itself be ``None`` = no
+        deadline)."""
         self._poll_inflight()  # stamp finished batches BEFORE new host work
+        self._pump_deadlines()  # expiring lanes flush BEFORE new admits
         rid = self._next_id
         self._next_id += 1
-        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
-        if edges.size and (edges.min() < 0 or edges.max() >= int(n_nodes)):
-            raise ValueError(
-                f"request {rid}: edge endpoints must lie in [0, "
-                f"{int(n_nodes)}); got [{edges.min()}, {edges.max()}]"
-            )
+        strict = self.strict if strict is None else bool(strict)
         t_submit = time.perf_counter()
+        try:
+            edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+            n_nodes = int(n_nodes)
+            if n_nodes < 0:
+                raise ValueError(f"n_nodes must be >= 0; got {n_nodes}")
+            if edges.size and (edges.min() < 0 or edges.max() >= n_nodes):
+                raise ValueError(
+                    f"edge endpoints must lie in [0, {n_nodes}); "
+                    f"got [{edges.min()}, {edges.max()}]"
+                )
+        except (ValueError, TypeError) as exc:
+            if strict:
+                raise ValueError(f"request {rid}: {exc}") from exc
+            self._reject(rid, "malformed", str(exc), t_submit)
+            return rid
+        o = self.engine.options
+        rel = deadline_s if deadline_s is not None else o.deadline_s
+        deadline = t_submit + float(rel) if rel is not None else None
         # the server IS the batch route, so its only dispatch decision is
         # batch-queue vs distributed: force the size policy (route="auto")
         # — an engine whose default route is "local"/"batch" must still
         # have its over-budget requests answered, not crash on budget_for
-        route = self.engine.route_for(int(n_nodes), edges.shape[0],
-                                      route="auto")
+        route = self.engine.route_for(n_nodes, edges.shape[0], route="auto")
         if route == "distributed":
-            self._serve_distributed(rid, edges, int(n_nodes), t_submit)
+            self._serve_distributed(rid, edges, n_nodes, t_submit)
             return rid
-        budget = self.grid.budget_for(int(n_nodes), edges.shape[0])
+        budget = self.grid.budget_for(n_nodes, edges.shape[0])
+        if (o.admission_tokens is not None
+                and self._tokens[budget] >= o.admission_tokens):
+            # cell full: the ladder's degrade rung (shed if disabled)
+            self._degrade(rid, edges, n_nodes, t_submit,
+                          budget=budget, why="overloaded",
+                          detail=f"budget cell {budget} at "
+                                 f"{self._tokens[budget]} tokens")
+            return rid
+        self._tokens[budget] += 1
         q = self._pending[budget]
-        q.append(_Pending(rid, edges, int(n_nodes), t_submit))
+        q.append(_Pending(rid, edges, n_nodes, t_submit, deadline))
         if len(q) >= self.batch_size:
-            self._flush(budget)
+            self._flush(budget, cause="size")
         return rid
+
+    # -------------------------------------------- degradation ladder
+    def _reject(self, rid: int, reason: str, detail: str,
+                t_submit: float) -> None:
+        self.rejected_requests += 1
+        self.results.append(RejectedRequest(
+            request_id=rid, reason=reason, detail=detail,
+            latency_s=time.perf_counter() - t_submit,
+        ))
+
+    def _degrade(
+        self,
+        rid: int,
+        edges: np.ndarray,
+        n_nodes: int,
+        t_submit: float,
+        *,
+        budget: Optional[ShapeBudget],
+        why: str,
+        detail: str,
+    ) -> None:
+        """Rungs 2–3 of the ladder: answer through the compile-free
+        wedge-sampled approximate lane (error bars attached, provenance
+        honest), else shed with a structured rejection.  Never raises —
+        an estimator failure falls through to the shed rung."""
+        o = self.engine.options
+        if o.approx_on_overload:
+            try:
+                report = self.engine.count_approx(
+                    (edges, n_nodes), seed=rid, options=o
+                )
+                self.approx_answers += 1
+                self.results.append(TriangleAnalytics(
+                    request_id=rid, n_nodes=n_nodes,
+                    triangles=report.triangles,
+                    c1=None, c2=None, num_horizontal=0, k=float("nan"),
+                    latency_s=time.perf_counter() - t_submit,
+                    budget=budget, overflow=False, route="approx",
+                    report=report, approx=report.approx,
+                ))
+                return
+            except Exception as exc:  # noqa: BLE001 — ladder must not raise
+                detail = f"{detail}; approx lane failed: {exc}"
+        self._reject(rid, why, detail, t_submit)
+
+    def pump(self) -> None:
+        """One poll step for open-loop drivers: finalize every finished
+        in-flight batch and fire any due deadline flushes.  Safe to call
+        at any time, any state, any frequency."""
+        self._poll_inflight()
+        self._pump_deadlines()
+
+    def _pump_deadlines(self) -> None:
+        """Flush every partial lane whose oldest pending deadline has
+        less slack left than the budget's measured flush cost — the
+        continuous-batching rule that makes p99 a function of deadlines
+        instead of stream mix."""
+        now = time.perf_counter()
+        for budget in [b for b, q in self._pending.items() if q]:
+            dls = [p.deadline for p in self._pending[budget]
+                   if p.deadline is not None]
+            if not dls:
+                continue
+            cost = self._flush_ewma_s.get(budget, self.EWMA_PRIOR_S)
+            if min(dls) - now <= cost:
+                self._flush(budget, cause="deadline")
 
     def _serve_distributed(
         self, rid: int, edges: np.ndarray, n_nodes: int, t_submit: float
@@ -225,13 +436,42 @@ class TriangleServer:
         distinct over-budget size compiles its own program and plans its
         own hedge buckets, the right trade for rare big-graph traffic —
         the point of the route is answering at all, where a batched lane
-        would need an unbounded static budget."""
+        would need an unbounded static budget.
+
+        Robustness: with ``options.distributed_timeout_s`` set the
+        (blocking, possibly seconds-long) run executes on a worker
+        thread under a wall-clock timeout; a timed-out or failed attempt
+        retries ONCE with the hedge exchange forced to ring at an 8×
+        smaller gather buffer (the cheap-memory spelling — a stall from
+        an oversized live allgather buffer cannot recur), and a second
+        failure degrades to the approximate lane.  The host is never
+        held hostage by one big request."""
+        o = self.engine.options
         g = from_edges(edges, n_nodes)
-        report = self.engine.count(g, route="distributed")
-        # batches that finished on-device while this (blocking, possibly
-        # seconds-long) run held the host must be stamped NOW, not at
-        # the next submit — the same attribution rule as host packing
+        attempts = [o]
+        if o.mode != "ring" or o.gather_buffer_limit_bytes > (1 << 20):
+            attempts.append(dataclasses.replace(
+                o, mode="ring",
+                gather_buffer_limit_bytes=max(
+                    1 << 20, o.gather_buffer_limit_bytes >> 3),
+            ))
+        report, last_err = None, "no attempt ran"
+        for attempt, opts in enumerate(attempts):
+            try:
+                report = self._run_distributed(g, opts, rid, attempt)
+                break
+            except Exception as exc:  # noqa: BLE001 — degrade, never raise
+                last_err = f"attempt {attempt} ({opts.mode}): {exc}"
+                if attempt + 1 < len(attempts):
+                    self.distributed_retries += 1
+        # batches that finished on-device while the distributed run held
+        # the host must be stamped NOW, not at the next submit — the
+        # same attribution rule as host packing
         self._poll_inflight()
+        if report is None:
+            self._degrade(rid, edges, n_nodes, t_submit, budget=None,
+                          why="failed", detail=f"distributed: {last_err}")
+            return
         self.distributed_requests += 1
         self.results.append(TriangleAnalytics(
             request_id=rid,
@@ -249,38 +489,96 @@ class TriangleServer:
             report=report,
         ))
 
-    def drain(self) -> list[TriangleAnalytics]:
+    def _run_distributed(self, g, opts, rid: int, attempt: int):
+        """One distributed attempt, wall-clock-bounded when
+        ``opts.distributed_timeout_s`` is set.  A timed-out dispatch is
+        *abandoned* (counted, its thread left to finish — a running jax
+        computation cannot be cancelled) rather than blocking the
+        serving loop."""
+        def call():
+            if self.faults is not None:
+                self.faults.before_distributed(rid, attempt)
+            return self.engine.count(g, route="distributed", options=opts)
+
+        timeout = opts.distributed_timeout_s
+        if timeout is None:
+            return call()
+        ex = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"tc-dist-{rid}"
+        )
+        fut = ex.submit(call)
+        try:
+            return fut.result(timeout=timeout)
+        except concurrent.futures.TimeoutError:
+            self.distributed_timeouts += 1
+            self.abandoned_distributed += 1
+            raise TimeoutError(
+                f"exceeded distributed_timeout_s={timeout}"
+            ) from None
+        finally:
+            ex.shutdown(wait=False)
+
+    def drain(self) -> list[ServeResult]:
         """Flush every partial batch (right-sized), finalize all
-        in-flight batches, and return all results so far."""
+        in-flight batches, and return all results so far.  Safe on an
+        empty server (no submits yet) — returns the empty list."""
         for budget in [b for b, q in self._pending.items() if q]:
-            self._flush(budget)
+            self._flush(budget, cause="drain")
         while self._inflight:
             self._finalize_one()
         return self.results
 
-    def _flush(self, budget: ShapeBudget) -> None:
+    def _flush(self, budget: ShapeBudget, *, cause: str = "size") -> None:
         reqs = self._pending.pop(budget, [])
         if not reqs:
             return
+        if cause == "deadline":
+            self.deadline_flushes += 1
+        else:
+            self.size_flushes += 1
         lanes = self.batch_size
-        if len(reqs) < lanes:  # drain path: smallest pow2 ladder step
+        if len(reqs) < lanes:  # partial flush: smallest pow2 ladder step
             lanes = min(
                 lanes,
                 1 << (len(reqs) - 1).bit_length() if len(reqs) > 1 else 1,
             )
-        gb = from_edges_batch(
-            [(r.edges, r.n_nodes) for r in reqs],
-            budget=budget,
-            batch_size=lanes,
-        )
-        plan = self.engine.plan_for(gb)
-        res = self.engine.count_batch_raw(gb, plan=plan)
+        t_flush = time.perf_counter()
+        try:
+            if self.faults is not None:
+                self.faults.before_batch(self.batches_run)
+            gb = from_edges_batch(
+                [(r.edges, r.n_nodes) for r in reqs],
+                budget=budget,
+                batch_size=lanes,
+            )
+            if gb.meta is not None:  # plan stability: one plan per
+                gb = dataclasses.replace(  # (cell, lane count), not one
+                    gb, meta=self.engine.pool_meta(budget, gb.meta)
+                )  # per timing-dependent grouping
+            plan = self.engine.plan_for(gb)
+            res = self.engine.count_batch_raw(gb, plan=plan)
+        except Exception as exc:  # noqa: BLE001 — device failure: degrade
+            self._fail_batch(reqs, budget, exc)
+            return
         # res is an in-flight device computation — don't block on it here
-        self._inflight.append((reqs, budget, res))
+        self._inflight.append((reqs, budget, res, t_flush))
         self.batches_run += 1
         self._poll_inflight()
         while len(self._inflight) > self.max_inflight:
             self._finalize_one()
+
+    def _fail_batch(self, reqs, budget: ShapeBudget, exc: Exception) -> None:
+        """A flush or fetch raised (simulated or real device failure):
+        every request of the batch is still answered — through the
+        approx lane when enabled, else a structured rejection — and the
+        cell's admission tokens are released.  The invariant survives
+        the failure; nothing deadlocks, nothing leaks."""
+        self.failed_batches += 1
+        self._tokens[budget] -= len(reqs)
+        for r in reqs:
+            self._degrade(r.request_id, r.edges, r.n_nodes, r.t_submit,
+                          budget=budget, why="failed",
+                          detail=f"batch dispatch failed: {exc}")
 
     @staticmethod
     def _batch_ready(res) -> bool:
@@ -302,12 +600,24 @@ class TriangleServer:
             self._finalize_one()
 
     def _finalize_one(self) -> None:
-        reqs, budget, res = self._inflight.popleft()
-        tri, c1, c2, nh, k, ovf = jax.device_get(
-            (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
-             res.h_overflow)
-        )
+        reqs, budget, res, t_flush = self._inflight.popleft()
+        try:
+            tri, c1, c2, nh, k, ovf = jax.device_get(
+                (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
+                 res.h_overflow)
+            )
+        except Exception as exc:  # noqa: BLE001 — fetch failure: degrade
+            self._fail_batch(reqs, budget, exc)
+            return
         done = time.perf_counter()
+        # flush→completion wall feeds the deadline policy's cost model
+        sample = done - t_flush
+        prev = self._flush_ewma_s.get(budget)
+        self._flush_ewma_s[budget] = (
+            sample if prev is None
+            else self.EWMA_ALPHA * sample + (1 - self.EWMA_ALPHA) * prev
+        )
+        self._tokens[budget] -= len(reqs)
         for i, r in enumerate(reqs):
             self.results.append(TriangleAnalytics(
                 request_id=r.request_id,
@@ -323,11 +633,37 @@ class TriangleServer:
             ))
 
     def summary(self) -> dict:
-        lat = sorted(r.latency_s for r in self.results)
+        """The ops scrape — safe to call at ANY moment: before the
+        first submit, mid-stream with lanes in flight, after an
+        all-rejected chaos storm.  Percentiles are over *completed*
+        (exact + approx) answers; every ratio a scraper might derive is
+        served as guarded counters, never a division here."""
+        completed = [r for r in self.results
+                     if isinstance(r, TriangleAnalytics)]
+        lat = sorted(r.latency_s for r in completed)
+        by_route: dict[str, int] = defaultdict(int)
+        for r in self.results:  # every answer, "rejected" included
+            by_route[r.route] += 1
         return {
             "requests": len(self.results),
+            "completed": len(completed),
+            "rejected": self.rejected_requests,
+            "by_route": dict(by_route),
             "batches": self.batches_run,
+            "failed_batches": self.failed_batches,
             "distributed_requests": self.distributed_requests,
+            "distributed_timeouts": self.distributed_timeouts,
+            "distributed_retries": self.distributed_retries,
+            "abandoned_distributed": self.abandoned_distributed,
+            "deadline_flushes": self.deadline_flushes,
+            "size_flushes": self.size_flushes,
+            "approx_answers": self.approx_answers,
+            "pending": sum(len(q) for q in self._pending.values()),
+            "inflight": len(self._inflight),
+            "flush_cost_ewma_ms": {
+                f"{b.n_budget}x{b.slot_budget}": 1e3 * v
+                for b, v in sorted(self._flush_ewma_s.items())
+            },
             "p50_ms": _pct_ms(lat, 50),
             "p99_ms": _pct_ms(lat, 99),
         }

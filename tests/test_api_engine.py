@@ -259,6 +259,10 @@ def test_tcoptions_validates_in_one_place():
         dict(row_mult=0),
         dict(slack=0.0),
         dict(gather_buffer_limit_bytes=0),
+        dict(deadline_s=0.0),
+        dict(admission_tokens=0),
+        dict(approx_samples=0),
+        dict(distributed_timeout_s=-1.0),
     ):
         with pytest.raises(ValueError):
             TCOptions(**bad)
@@ -266,7 +270,7 @@ def test_tcoptions_validates_in_one_place():
     o = TCOptions(bucket_widths=[np.int64(32), 256])
     assert o.bucket_widths == (32, 256)
     assert hash(o) == hash(TCOptions(bucket_widths=(32, 256)))
-    assert "auto" in ROUTES and len(ROUTES) == 4
+    assert "auto" in ROUTES and "approx" in ROUTES and len(ROUTES) == 5
 
 
 def test_plan_view_is_the_plan_cache_key():

@@ -226,7 +226,13 @@ def test_serving_layer_smoke():
         assert not by_id[rid].overflow
     assert server.batches_run >= 2
     assert server.summary()["requests"] == len(graphs)
-    # malformed requests (aliasing / negative node ids) fail loudly
+    # malformed requests (aliasing / negative node ids): answered with a
+    # structured rejection by default, raised only under strict=True
     for bad in (np.array([[0, 7]]), np.array([[-1, 3]])):
+        s = TriangleServer()
+        rid = s.submit(bad, 5)
+        (res,) = s.drain()
+        assert res.request_id == rid and res.route == "rejected"
+        assert res.reason == "malformed"
         with pytest.raises(ValueError):
-            TriangleServer().submit(bad, 5)
+            TriangleServer(strict=True).submit(bad, 5)

@@ -1,0 +1,341 @@
+"""Serving robustness (DESIGN.md §7): the structured-rejection contract,
+deadline-driven flushing, the admission/degradation ladder, the wedge-
+sampled approximate lane, drain() under partial lanes, summary() safety,
+and the chaos invariant under the full fault plan."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import FIXTURES, nx_triangles
+
+from repro.api import ApproxEstimate, TCOptions, TriangleEngine
+from repro.core.approx import wedge_sample_estimate
+from repro.graph import generators as gen
+from repro.graph.csr import BudgetGrid
+from repro.launch.robust import (
+    FaultPlan,
+    TimedRequest,
+    run_chaos,
+    synth_requests,
+)
+from repro.launch.serve_tc import RejectedRequest, TriangleAnalytics
+
+
+# --------------------------------------------------------------- approx
+def test_wedge_sample_estimate_within_error_budget():
+    """Relative error <= 10% at the default sample rate on fixtures
+    dense enough to have a stable closed-wedge fraction."""
+    for name in ("rmat8", "er200", "ring_of_cliques", "complete9"):
+        e, n = FIXTURES[name]
+        exact = nx_triangles(e, n)
+        est = wedge_sample_estimate(e, n, samples=8192, seed=0)
+        assert abs(est.triangles - exact) / max(exact, 1) <= 0.10, name
+        assert est.stderr >= 0.0 and est.ci95 == pytest.approx(1.96 * est.stderr)
+        assert est.samples == 8192 and not est.exact
+
+
+def test_wedge_sample_estimate_zero_wedges_is_exact():
+    """W = 0 (empty graph, matching): zero triangles, zero-width CI,
+    flagged exact."""
+    for e, n in (
+        (np.zeros((0, 2), np.int64), 0),
+        (np.array([[0, 1], [2, 3]]), 4),  # perfect matching
+    ):
+        est = wedge_sample_estimate(e, n, samples=64, seed=1)
+        assert est == ApproxEstimate(
+            triangles=0.0, stderr=0.0, ci95=0.0, samples=0, closed=0,
+            wedges=0.0, exact=True,
+        )
+
+
+def test_wedge_sample_estimate_validates_input():
+    with pytest.raises(ValueError):
+        wedge_sample_estimate(np.array([[0, 5]]), 5, samples=8)
+    with pytest.raises(ValueError):
+        wedge_sample_estimate(np.array([[0, 1]]), 2, samples=0)
+
+
+def test_count_approx_report_contract():
+    """The approx route's TriangleReport: honest provenance, NaN k, no
+    horizontal probes, the estimate attached."""
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    e, n = FIXTURES["karate"]
+    rep = engine.count_approx((e, n), samples=4096, seed=3)
+    assert rep.route == "approx"
+    assert rep.approx is not None and rep.approx.samples == 4096
+    assert np.isnan(rep.k) and rep.num_horizontal == 0
+    assert rep.c1 is None and rep.c2 is None
+    assert rep.plan_id == "wedge-sample/4096"
+    exact = nx_triangles(e, n)
+    assert abs(rep.triangles - exact) / max(exact, 1) <= 0.25
+    # engine.count routes "approx" through the same lane
+    rep2 = engine.count((e, n), route="approx",
+                        options=TCOptions(approx_samples=4096))
+    assert rep2.route == "approx" and rep2.approx.samples == 4096
+
+
+# ---------------------------------------------------- structured results
+def test_submit_malformed_returns_structured_rejection():
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    server = engine.serve(batch_size=4)
+    good_e, good_n = FIXTURES["karate"]
+    ids = [server.submit(good_e, good_n)]
+    for bad_e, bad_n in (
+        (np.array([[0, 9]]), 5),      # endpoint aliasing
+        (np.array([[-2, 1]]), 5),     # negative id
+        (np.array([1, 2, 3]), 5),     # unparseable shape
+        (np.array([[0, 1]]), -1),     # negative n_nodes
+    ):
+        ids.append(server.submit(bad_e, bad_n))
+    results = server.drain()
+    assert sorted(r.request_id for r in results) == sorted(ids)
+    by_id = {r.request_id: r for r in results}
+    assert isinstance(by_id[ids[0]], TriangleAnalytics)
+    assert by_id[ids[0]].triangles == nx_triangles(good_e, good_n)
+    for rid in ids[1:]:
+        rej = by_id[rid]
+        assert isinstance(rej, RejectedRequest)
+        assert rej.route == "rejected" and rej.reason == "malformed"
+        assert rej.detail  # a human-readable cause, not an empty shrug
+    # strict mode restores the legacy raise, with the id in the message
+    with pytest.raises(ValueError, match="request"):
+        server.submit(np.array([[0, 9]]), 5, strict=True)
+
+
+def test_summary_safe_on_empty_and_all_rejected():
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    server = engine.serve()
+    s = server.summary()
+    assert s["requests"] == 0 and s["completed"] == 0
+    assert s["p50_ms"] == 0.0 and s["p99_ms"] == 0.0
+    assert server.drain() == []
+    # all-rejected stream: percentiles still defined, counts honest
+    server.submit(np.array([[0, 9]]), 5)
+    server.submit(np.array([[3, 9]]), 5)
+    server.drain()
+    s = server.summary()
+    assert s["requests"] == 2 and s["completed"] == 0
+    assert s["rejected"] == 2 and s["p99_ms"] == 0.0
+    assert s["by_route"] == {"rejected": 2}
+
+
+# ------------------------------------------------------------ deadlines
+def test_deadline_flushes_partial_lane():
+    """One request with a deadline must be answered by a deadline flush
+    (never waiting for batch_size) once its slack is inside the cell's
+    flush-cost estimate."""
+    engine = TriangleEngine(TCOptions(backend="jnp", deadline_s=0.01))
+    server = engine.serve(batch_size=8)
+    e, n = FIXTURES["karate"]
+    rid = server.submit(e, n)
+    t0 = __import__("time").perf_counter()
+    while not server.results:
+        server.pump()
+        assert __import__("time").perf_counter() - t0 < 30.0, "never flushed"
+    (res,) = server.results
+    assert res.request_id == rid
+    assert res.triangles == nx_triangles(e, n)
+    assert server.deadline_flushes == 1 and server.size_flushes == 0
+
+
+def test_per_request_deadline_overrides_options():
+    """deadline_s=None on options + per-submit deadline: still flushes;
+    and a far-future per-request deadline never fires early."""
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    server = engine.serve(batch_size=8)
+    e, n = FIXTURES["karate"]
+    server.submit(e, n, deadline_s=0.01)
+    t0 = __import__("time").perf_counter()
+    while not server.results:
+        server.pump()
+        assert __import__("time").perf_counter() - t0 < 30.0
+    assert server.deadline_flushes == 1
+    server.submit(e, n, deadline_s=1e9)
+    server.pump()
+    assert len(server.results) == 1  # still pending, not flushed
+    server.drain()
+    assert len(server.results) == 2
+
+
+# ----------------------------------------------------- admission ladder
+def test_admission_ladder_degrades_to_approx_then_sheds():
+    e, n = FIXTURES["karate"]
+    exact = nx_triangles(e, n)
+    # rung 2: cell full -> wedge-sampled answer with error bars
+    engine = TriangleEngine(TCOptions(
+        backend="jnp", admission_tokens=1, approx_samples=8192,
+    ))
+    server = engine.serve(batch_size=8)
+    r0 = server.submit(e, n)   # takes the cell's only token
+    r1 = server.submit(e, n)   # over admission: degraded, answered NOW
+    approx = [r for r in server.results if r.request_id == r1]
+    assert len(approx) == 1 and approx[0].route == "approx"
+    assert approx[0].approx is not None
+    assert abs(approx[0].triangles - exact) / exact <= 0.25
+    assert server.approx_answers == 1
+    results = server.drain()
+    assert {r.request_id for r in results} == {r0, r1}
+    exact_res = next(r for r in results if r.request_id == r0)
+    assert exact_res.triangles == exact and exact_res.route == "batched"
+    # rung 3: approx disabled -> structured shed
+    engine = TriangleEngine(TCOptions(
+        backend="jnp", admission_tokens=1, approx_on_overload=False,
+    ))
+    server = engine.serve(batch_size=8)
+    server.submit(e, n)
+    r1 = server.submit(e, n)
+    shed = next(r for r in server.results if r.request_id == r1)
+    assert isinstance(shed, RejectedRequest) and shed.reason == "overloaded"
+    # tokens released on completion: the cell admits again after drain
+    server.drain()
+    r2 = server.submit(e, n)
+    server.drain()
+    assert any(isinstance(r, TriangleAnalytics) and r.request_id == r2
+               for r in server.results)
+
+
+def test_failed_batch_degrades_every_lane():
+    """An injected device failure at dispatch answers every lane of the
+    batch through the ladder — nothing raises, nothing is lost."""
+    plan = FaultPlan(fail_batch_every=1)  # every batch dispatch fails
+    engine = TriangleEngine(TCOptions(backend="jnp", approx_samples=2048))
+    server = engine.serve(batch_size=2, faults=plan)
+    e, n = FIXTURES["karate"]
+    ids = [server.submit(e, n) for _ in range(4)]
+    results = server.drain()
+    assert sorted(r.request_id for r in results) == ids
+    assert all(r.route == "approx" for r in results)
+    assert server.failed_batches == 2
+    s = server.summary()
+    assert s["pending"] == 0 and s["inflight"] == 0
+
+
+# ------------------------------------------------ drain / partial lanes
+def test_drain_partial_lanes_bit_identity():
+    """Mixed-budget queues drained mid-fill: every request answered
+    exactly once, right-sized flushes, per-request bit-identity with
+    engine.count on the same options."""
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    server = engine.serve(batch_size=4)
+    graphs = [
+        FIXTURES["karate"],            # small cell
+        FIXTURES["er200"],             # bigger cell
+        FIXTURES["complete9"],
+        FIXTURES["geometric"],
+        FIXTURES["ring_of_cliques"],
+        gen.erdos_renyi(150, 0.05, seed=11),
+        FIXTURES["dolphins_like"],
+    ]
+    ids = [server.submit(e, n) for e, n in graphs]
+    results = server.drain()
+    assert sorted(r.request_id for r in results) == sorted(ids)
+    assert len({r.request_id for r in results}) == len(ids)
+    by_id = {r.request_id: r for r in results}
+    for rid, (e, n) in zip(ids, graphs):
+        res = by_id[rid]
+        assert isinstance(res, TriangleAnalytics)
+        ref = engine.count((e, n), route="local")
+        assert res.triangles == ref.triangles, rid
+        assert not res.overflow
+    # right-sizing: no flush padded a stray single request to 4 lanes —
+    # partial queues flushed at the smallest pow2 that fits
+    assert server.batches_run >= 2
+    s = server.summary()
+    assert s["completed"] == len(ids) and s["pending"] == 0
+
+
+@pytest.mark.slow
+def test_drain_interleaves_distributed_requests():
+    """Over-budget requests answered inline via the distributed route,
+    batched lanes still exact, every id exactly once."""
+    engine = TriangleEngine(
+        TCOptions(backend="jnp"),
+        budgets=BudgetGrid(max_nodes=256, max_slots=2048),
+    )
+    server = engine.serve(batch_size=4)
+    small = [FIXTURES["karate"], FIXTURES["complete9"],
+             FIXTURES["dolphins_like"]]
+    big = gen.erdos_renyi(300, 0.03, seed=9)  # over the 256-node top cell
+    ids = [server.submit(*small[0]), server.submit(*big),
+           server.submit(*small[1]), server.submit(*small[2])]
+    results = server.drain()
+    assert sorted(r.request_id for r in results) == sorted(ids)
+    by_id = {r.request_id: r for r in results}
+    assert by_id[ids[1]].route == "distributed"
+    assert by_id[ids[1]].triangles == nx_triangles(*big)
+    for rid, (e, n) in zip((ids[0], ids[2], ids[3]), small):
+        assert by_id[rid].route == "batched"
+        assert by_id[rid].triangles == nx_triangles(e, n)
+    assert server.distributed_requests == 1
+
+
+# ------------------------------------------------------- chaos invariant
+def test_synth_requests_arrival_shapes():
+    tr = synth_requests(24, arrival="poisson", rate_hz=500, seed=2,
+                        smoke=True)
+    assert len(tr) == 24 and tr[0].t == 0.0
+    assert all(b.t >= a.t for a, b in zip(tr, tr[1:]))
+    tr = synth_requests(24, arrival="burst", burst_len=8, burst_gap_s=0.05,
+                        seed=2, smoke=True)
+    gaps = np.diff([r.t for r in tr])
+    assert (gaps[7] > 10 * gaps.min()) and (gaps[15] > 10 * gaps.min())
+    with pytest.raises(ValueError):
+        synth_requests(4, arrival="uniform")
+    with pytest.raises(ValueError):
+        synth_requests(4, mix="nope")
+
+
+def test_fault_plan_is_deterministic():
+    plan = FaultPlan(malformed_every=3, oversized_every=5,
+                     oversized_nodes=600)
+    e, n = FIXTURES["karate"]
+    a = [plan.mutate(i, e, n)[1] for i in range(15)]
+    b = [plan.mutate(i, e, n)[1] for i in range(15)]
+    assert a == b
+    assert a[2] == n  # malformed keeps n, swaps edges for aliasing ones
+    assert (plan.mutate(2, e, n)[0] == np.array([[0, n]])).all()
+    assert a[4] == 600  # oversized star
+    assert a[0] == n and a[1] == n  # ordinal 0/1 untouched
+
+
+@pytest.mark.slow
+def test_chaos_invariant_under_full_fault_plan():
+    """The acceptance gate: bursty open-loop trace + every fault class;
+    each request id answered exactly once with a structured result,
+    nothing pending, nothing in flight, and at least one result of each
+    category actually exercised."""
+    plan = FaultPlan(
+        malformed_every=7, oversized_every=11, oversized_nodes=600,
+        stall_batch_every=5, stall_s=0.02, fail_batch_every=6,
+        fail_distributed_every=1, fail_distributed_attempts=2,
+    )
+    engine = TriangleEngine(
+        TCOptions(backend="jnp", deadline_s=0.05, admission_tokens=16,
+                  approx_samples=4096),
+        budgets=BudgetGrid(max_nodes=256, max_slots=4096),
+    )
+    server = engine.serve(batch_size=8, faults=plan)
+    trace = synth_requests(48, arrival="burst", rate_hz=400.0,
+                           burst_len=12, burst_gap_s=0.05, seed=0,
+                           smoke=True)
+    audit = run_chaos(server, trace, faults=plan)
+    assert audit["ok"], audit
+    assert audit["answered"] == audit["submitted"] == 48
+    assert not audit["unanswered"] and not audit["duplicates"]
+    assert audit["leaked_pending"] == 0 and audit["leaked_inflight"] == 0
+    # the plan really fired: all three result categories present
+    assert audit["exact"] > 0 and audit["approx"] > 0
+    assert audit["rejected"] > 0
+    assert audit["exact"] + audit["approx"] + audit["rejected"] == 48
+
+
+def test_run_chaos_plain_server_all_exact():
+    """A fault-free replay through the same driver: everything exact."""
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    trace = [TimedRequest(0.0, *FIXTURES["karate"]),
+             TimedRequest(0.0, *FIXTURES["complete9"]),
+             TimedRequest(0.001, *FIXTURES["dolphins_like"])]
+    audit = run_chaos(engine.serve(batch_size=4), trace)
+    assert audit["ok"] and audit["exact"] == 3
+    assert audit["approx"] == 0 and audit["rejected"] == 0
