@@ -1,0 +1,86 @@
+"""Per-vertex attribution overhead gate.
+
+Attribution rides the probe pass (three segment-sum scatters per chunk,
+no second pass over the graph), so its cost must stay a small fraction of
+the counts-only pipeline.  ``measure_pervertex`` times scale-12 RMAT
+through ``TriangleEngine.count`` with ``per_vertex`` off vs on — same
+route, same backend, interleaved with alternating order, per-side minima
+(same rationale as ``api_bench``: both sides are jitted programs and the
+minimum isolates the real added work from host jitter) — and asserts the
+ratio stays under the 15% acceptance bound.  Writes
+``results/BENCH_pervertex.json`` so the overhead is tracked across PRs
+like the other BENCH_* trajectories.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.api import TCOptions, TriangleEngine
+from repro.graph import generators as gen
+from repro.graph.csr import from_edges
+
+OVERHEAD_BOUND = 0.15
+
+
+def measure_pervertex(
+    scale: int = 12,
+    repeats: int = 15,
+    seed: int = 0,
+    out: str | None = None,
+) -> dict:
+    edges, n = gen.rmat(scale, 16, seed=seed)
+    g = from_edges(edges, n)
+    engine = TriangleEngine(TCOptions(backend="jnp"))
+    opt_pv = TCOptions(backend="jnp", per_vertex=True)
+
+    def counts_only() -> int:
+        return engine.count(g, route="local").triangles
+
+    def with_pv() -> int:
+        rep = engine.count(g, route="local", options=opt_pv)
+        # the report device_gets per_vertex; touch one element so the
+        # timed side can't skip materializing it
+        return rep.triangles + int(0 * rep.per_vertex[0])
+
+    want = counts_only()  # warm both jit caches before timing
+    rep = engine.count(g, route="local", options=opt_pv)
+    assert rep.triangles == want, "attribution must not change the count"
+    assert int(np.asarray(rep.per_vertex).sum()) == 3 * want
+    base_s, pv_s = [], []
+    for i in range(repeats):
+        pair = ((counts_only, base_s), (with_pv, pv_s))
+        for fn, sink in (pair if i % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            fn()
+            sink.append(time.perf_counter() - t0)
+    base = min(base_s)
+    pv = min(pv_s)
+    overhead = pv / base - 1.0
+    row = {
+        "scale": scale,
+        "repeats": repeats,
+        "triangles": want,
+        "counts_only_ms": base * 1e3,
+        "per_vertex_ms": pv * 1e3,
+        "overhead_frac": overhead,
+        "bound": OVERHEAD_BOUND,
+        "pass": overhead <= OVERHEAD_BOUND,
+    }
+    print(f"pervertex_off,{base * 1e6:.0f},T={want}")
+    print(f"pervertex_on,{pv * 1e6:.0f},"
+          f"overhead={overhead * 100:.2f}%|bound={OVERHEAD_BOUND:.0%}"
+          f"|pass={row['pass']}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"pervertex_json,0,written={os.path.normpath(out)}")
+    assert row["pass"], (
+        f"per-vertex overhead {overhead:.1%} exceeds the "
+        f"{OVERHEAD_BOUND:.0%} acceptance bound"
+    )
+    return row

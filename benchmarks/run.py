@@ -23,6 +23,9 @@ no argument runs everything.
               invariant under fault injection; writes
               ``results/BENCH_robust.json``.  ``robust_smoke`` is the
               CI variant (smaller trace, same JSON)
+  pervertex-> per-vertex attribution overhead vs counts-only on the
+              scale-12 fixture (must stay <= 15%); writes
+              ``results/BENCH_pervertex.json``
   api      -> TriangleEngine facade overhead vs the direct pipeline on
               the scale-10 fixture (must stay < 5%); writes
               ``results/BENCH_api.json``
@@ -187,6 +190,17 @@ def bench_api():
     measure_api(scale=10, out=out)
 
 
+def bench_pervertex():
+    """Per-vertex attribution overhead gate: scale-12 RMAT through the
+    local route with ``TCOptions(per_vertex=True)`` vs counts-only —
+    asserts the <= 15% acceptance bound and writes
+    ``results/BENCH_pervertex.json``."""
+    from benchmarks.pervertex_bench import measure_pervertex
+
+    out = os.path.join(_ROOT, "results", "BENCH_pervertex.json")
+    measure_pervertex(scale=12, out=out)
+
+
 def bench_roofline():
     from benchmarks.roofline import RESULTS, analyze
 
@@ -213,6 +227,7 @@ BENCHES = {
     "robust": bench_robust,
     "robust_smoke": lambda: bench_robust(smoke=True),
     "api": bench_api,
+    "pervertex": bench_pervertex,
     "comm": bench_comm,
     "comm_smoke": lambda: bench_comm(smoke=True),
     "roofline": bench_roofline,

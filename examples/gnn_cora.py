@@ -1,6 +1,9 @@
 """Full-batch GAT training on a synthetic Cora-shaped graph, with triangle
-counts as extra structural node features — the paper's algorithm feeding
-the GNN substrate it shares.
+analytics as extra structural node features — the paper's algorithm feeding
+the GNN substrate it shares.  Two columns come from one engine pass:
+BFS level (already a by-product of the cover-edge plan) and the per-vertex
+triangle count (``TCOptions(per_vertex=True)``), log-compressed since
+triangle participation is heavy-tailed.
 
     PYTHONPATH=src python examples/gnn_cora.py
 """
@@ -8,8 +11,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.api import TriangleEngine
+from repro.api import TCOptions, TriangleEngine
 from repro.configs.data import gnn_batch
 from repro.configs.registry import arch_module
 from repro.graph.csr import from_edges
@@ -17,23 +21,34 @@ from repro.launch import steps as steps_mod
 from repro.train.optimizer import OptConfig, opt_init
 
 
+def triangle_features(edges: np.ndarray, n: int) -> jnp.ndarray:
+    """float32[n, 2] structural columns from ONE engine pass: BFS level
+    (scaled) and log1p per-vertex triangle count.  Sanity-gates the
+    attribution the way CI smoke expects: finite and non-negative."""
+    rep = TriangleEngine().count(
+        from_edges(edges, n), options=TCOptions(per_vertex=True)
+    )
+    pv = np.asarray(rep.per_vertex)
+    assert pv.shape == (n,), pv.shape
+    assert np.isfinite(pv).all() and (pv >= 0).all(), "per-vertex counts must be finite and non-negative"
+    assert int(pv.sum()) == 3 * int(rep.triangles)
+    levels = jnp.asarray(rep.levels, jnp.float32) / 10.0
+    tri = jnp.log1p(jnp.asarray(pv, jnp.float32))
+    print(f"graph triangles: {rep.triangles}  k={rep.k:.3f}  "
+          f"max per-vertex: {int(pv.max()) if n else 0}")
+    return jnp.stack([levels, tri], axis=1)
+
+
 def main():
-    cfg = dataclasses.replace(arch_module("gat-cora").SMOKE, d_in=9,
+    cfg = dataclasses.replace(arch_module("gat-cora").SMOKE, d_in=10,
                               n_classes=3)
     batch = gnn_batch("gat-cora", cfg, n_nodes=300, n_edges_und=1200,
                       d_feat=8, seed=1)
-    # --- structural feature from the paper's algorithm: per-vertex level
-    import numpy as np
-
-    g = from_edges(
-        np.stack([np.asarray(batch.src), np.asarray(batch.dst)], 1), 300
-    )
-    rep = TriangleEngine().count(g)
-    levels = jnp.asarray(rep.levels, jnp.float32)[:, None] / 10.0
+    edges = np.stack([np.asarray(batch.src), np.asarray(batch.dst)], 1)
+    feats = triangle_features(edges, 300)
     batch = dataclasses.replace(
-        batch, node_feat=jnp.concatenate([batch.node_feat, levels], axis=1)
+        batch, node_feat=jnp.concatenate([batch.node_feat, feats], axis=1)
     )
-    print(f"graph triangles: {rep.triangles}  k={rep.k:.3f}")
 
     params = steps_mod.init_for("gat-cora", cfg, jax.random.key(0))
     opt_cfg = OptConfig(lr=5e-3, warmup=5, total_steps=100)

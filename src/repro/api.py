@@ -98,6 +98,13 @@ class TCOptions:
       query_chunk:    fori-loop probe-chunk rows (bounds peak memory);
                       also overrides ``row_mult`` when set.
       row_mult:       bucket-row quantization of bounded plans.
+      per_vertex:     also return per-vertex triangle attribution
+                      (``TriangleReport.per_vertex`` + derived
+                      clustering/transitivity/top-k) — computed in-trace
+                      during the probe, no second pass; exact on the
+                      local, batch and distributed routes (``None`` on
+                      approx).  Plan-irrelevant: it never changes the
+                      bounded-plan cache key.
 
     Local / batch route knobs (Algorithm 1)
       d_max:          lossy candidate-width clamp (``None`` = exact).
@@ -146,6 +153,7 @@ class TCOptions:
     bucket_widths: tuple = DEFAULT_BUCKET_WIDTHS
     query_chunk: Optional[int] = None
     row_mult: int = 64
+    per_vertex: bool = False
     # -- local / batch route (Algorithm 1) ----------------------------
     d_max: Optional[int] = None
     cap_h: Optional[int] = None
@@ -283,6 +291,14 @@ class TriangleReport:
     the estimator never runs the BFS pipeline, and the provenance
     (``route="approx"``, ``plan_id="wedge-sample/<k>"``, the ``approx``
     payload) says exactly that.
+
+    With ``TCOptions(per_vertex=True)`` the exact routes additionally
+    carry ``per_vertex`` (int array[n_nodes], each vertex's triangle
+    count — ``sum(per_vertex) == 3 * triangles``) and ``degrees``
+    (int array[n_nodes]), from which :meth:`local_clustering`,
+    :meth:`transitivity` and :meth:`top_k` derive the classic analytics.
+    The approx route answers ``per_vertex=None`` — an estimator has no
+    attribution to stand behind.
     """
 
     triangles: int
@@ -301,6 +317,44 @@ class TriangleReport:
     comm: Optional[CommTally] = None
     per_device: Optional[np.ndarray] = None
     approx: Optional[ApproxEstimate] = None
+    per_vertex: Optional[np.ndarray] = None
+    degrees: Optional[np.ndarray] = None
+
+    def _require_per_vertex(self) -> None:
+        if self.per_vertex is None or self.degrees is None:
+            raise ValueError(
+                "this report carries no per-vertex attribution; run with "
+                "TCOptions(per_vertex=True) on an exact route"
+            )
+
+    def local_clustering(self) -> np.ndarray:
+        """Per-vertex local clustering coefficient ``t(v) / C(deg(v), 2)``
+        (0 where ``deg(v) < 2``), float64[n_nodes]."""
+        self._require_per_vertex()
+        d = self.degrees.astype(np.int64)
+        wedges = d * (d - 1) // 2
+        out = np.zeros(d.shape, np.float64)
+        np.divide(
+            self.per_vertex.astype(np.float64), wedges,
+            out=out, where=wedges > 0,
+        )
+        return out
+
+    def transitivity(self) -> float:
+        """Global transitivity ``3T / #wedges`` (0.0 on wedge-free
+        graphs) — closed triples over connected triples."""
+        self._require_per_vertex()
+        d = self.degrees.astype(np.int64)
+        wedges = int((d * (d - 1) // 2).sum())
+        return 0.0 if wedges == 0 else 3.0 * self.triangles / wedges
+
+    def top_k(self, k: int) -> np.ndarray:
+        """Vertex ids of the ``k`` triangle-densest vertices, descending
+        by ``per_vertex`` count (ties broken by lower id)."""
+        self._require_per_vertex()
+        pv = self.per_vertex.astype(np.int64)
+        order = np.lexsort((np.arange(pv.shape[0]), -pv))
+        return order[: max(0, min(int(k), pv.shape[0]))]
 
 
 def _plan_id(plan: IntersectPlan, kind: str) -> str:
@@ -550,12 +604,17 @@ class TriangleEngine:
         if n_nodes == 0:
             backend, _ = resolve_backend(o.backend, o.interpret)
             no_split = r in ("distributed", "approx")
+            empty_pv = (
+                np.zeros((0,), np.int32)
+                if (o.per_vertex and r != "approx") else None
+            )
             return TriangleReport(
                 triangles=0, k=0.0, num_horizontal=0,
                 c1=None if no_split else 0, c2=None if no_split else 0,
                 overflow=Overflow(), route=r, backend=backend,
                 plan_id="empty", options=o,
                 levels=None if no_split else np.zeros((0,), np.int32),
+                per_vertex=empty_pv, degrees=empty_pv,
             )
         if r == "approx":
             return self.count_approx(
@@ -571,19 +630,23 @@ class TriangleEngine:
             plan = self.plan_for(gb)
             res = self.count_batch_raw(gb, options=o, plan=plan)
             res = _seq._squeeze_lane(res)
+            # the lane is budget-padded: slice attribution (and degrees)
+            # back to the request's real vertex count
             return self._report_local(res, o, route="batch",
-                                      plan_id=_plan_id(plan, "bounded"))
+                                      plan_id=_plan_id(plan, "bounded"),
+                                      deg=gb.deg[0], n=n_nodes)
         if g is None:
             g = from_edges(edges, n_nodes)
         if r == "local":
             res = self.count_raw(g, options=o)
-            return self._report_local(res, o, route="local", plan_id=None)
+            return self._report_local(res, o, route="local", plan_id=None,
+                                      deg=g.deg, n=g.n_nodes)
         if r == "distributed":
             # resolve the hedge mode BEFORE building the report so the
             # provenance (options.mode, plan_id) records the mode that ran
             o = self._resolve_hedge_mode(g, self.mesh, "p", o)
             res = self.count_distributed_raw(g, options=o)
-            return self._report_distributed(res, o)
+            return self._report_distributed(res, o, deg=g.deg)
         raise ValueError(f"unroutable request (route={r!r})")
 
     def count_batch(
@@ -621,10 +684,16 @@ class TriangleEngine:
         backend, _ = resolve_backend(o.backend, o.interpret)
         pid = (_plan_id(plan, "bounded") if plan is not None
                else f"exact/{backend}")
-        tri, c1, c2, nh, k, ovf, lev = jax.device_get(
+        tri, c1, c2, nh, k, ovf, lev, n_lane = jax.device_get(
             (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
-             res.h_overflow, res.levels)
+             res.h_overflow, res.levels, gb.n_nodes)
         )
+        pv_b = deg_b = None
+        if o.per_vertex and res.per_vertex is not None:
+            pv_b, deg_b = (
+                np.asarray(x)
+                for x in jax.device_get((res.per_vertex, gb.deg))
+            )
         return [
             TriangleReport(
                 triangles=int(tri[i]), k=float(k[i]),
@@ -633,6 +702,15 @@ class TriangleEngine:
                 overflow=Overflow(h=bool(ovf[i])),
                 route="batch", backend=backend, plan_id=pid, options=o,
                 levels=np.asarray(lev[i]),
+                # each lane sliced to ITS real vertex count — padding
+                # vertices are isolated and carry zero credit by
+                # construction, so nothing is lost in the slice
+                per_vertex=(
+                    pv_b[i, : int(n_lane[i])] if pv_b is not None else None
+                ),
+                degrees=(
+                    deg_b[i, : int(n_lane[i])] if deg_b is not None else None
+                ),
             )
             for i in range(n_real)
         ]
@@ -710,6 +788,8 @@ class TriangleEngine:
         *,
         route: str,
         plan_id: Optional[str],
+        deg=None,
+        n: Optional[int] = None,
     ) -> TriangleReport:
         tri, c1, c2, nh, k, ovf, lev = jax.device_get(
             (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
@@ -717,15 +797,22 @@ class TriangleEngine:
         )
         backend, _ = resolve_backend(o.backend, o.interpret)
         plan_id = plan_id or f"exact/{backend}"
+        pv = degs = None
+        if o.per_vertex and res.per_vertex is not None and deg is not None:
+            pv, degs = (
+                np.asarray(x) for x in jax.device_get((res.per_vertex, deg))
+            )
+            if n is not None:  # budget-padded lane -> real vertex count
+                pv, degs = pv[:n], degs[:n]
         return TriangleReport(
             triangles=int(tri), k=float(k), num_horizontal=int(nh),
             c1=int(c1), c2=int(c2), overflow=Overflow(h=bool(ovf)),
             route=route, backend=backend, plan_id=plan_id, options=o,
-            levels=np.asarray(lev),
+            levels=np.asarray(lev), per_vertex=pv, degrees=degs,
         )
 
     def _report_distributed(
-        self, res: "_ptc.ParallelTCResult", o: TCOptions
+        self, res: "_ptc.ParallelTCResult", o: TCOptions, *, deg=None
     ) -> TriangleReport:
         tri, nh, k, t_ovf, h_ovf, pd = jax.device_get(
             (res.triangles, res.num_horizontal, res.k,
@@ -733,6 +820,11 @@ class TriangleEngine:
         )
         backend, _ = resolve_backend(o.backend, o.interpret)
         p = pd.shape[0]
+        pv = degs = None
+        if res.per_vertex is not None and deg is not None:
+            pv, degs = (
+                np.asarray(x) for x in jax.device_get((res.per_vertex, deg))
+            )
         return TriangleReport(
             triangles=int(tri), k=float(k), num_horizontal=int(nh),
             c1=None, c2=None,  # Alg 2 has no apex-level split — no sentinel
@@ -740,6 +832,7 @@ class TriangleEngine:
             route="distributed", backend=backend,
             plan_id=f"hedge/{o.mode}/p{p}", options=o,
             comm=res.comm, per_device=np.asarray(pd),
+            per_vertex=pv, degrees=degs,
         )
 
 

@@ -26,8 +26,10 @@ count (an upper-bound ``n_levels`` makes it a per-phase envelope).
 Phase attribution is structural: all-to-alls are the transpose,
 all-gathers before the transpose are splitter gossip and after it the
 horizontal exchange, ppermutes are ring-mode horizontal rounds,
-n-vector all-reduces are BFS (per-sweep when inside the BFS while
-loop), scalar all-reduces are the final reductions.
+n-vector pmax all-reduces are BFS level syncs (per-sweep when inside
+the BFS while loop), and everything else that reduces — the scalar
+psums/pmaxes plus, with per-vertex attribution on, the n-vector credit
+psum — is the final reduction phase.
 """
 from __future__ import annotations
 
@@ -114,12 +116,15 @@ def tally_comm(
     mode: str,
     frontier_dtype: str,
     sweeps,
+    per_vertex: bool = False,
 ) -> CommTally:
     """Analytic ``CommTally`` of one shard-program run.  ``sweeps`` may
     be a traced int32 (the in-trace call from ``_tc_shard``) or a host
     int; every other argument is static.  Formulas mirror
     ``comm_model.wire_bytes_report`` term by term — by construction,
-    since both sides call the same ``*_wire_bytes`` conventions."""
+    since both sides call the same ``*_wire_bytes`` conventions.
+    ``per_vertex`` adds the attribution feature's one extra collective —
+    an n-vector credit psum — to the reduce phase."""
     word = 4
     fsize = np.dtype(frontier_dtype).itemsize
     if mode == "allgather":
@@ -137,7 +142,10 @@ def tally_comm(
         splitter=_sat32(allgather_wire_bytes(p * word, p)),
         transpose=_sat32(2 * alltoall_wire_bytes(p * cap_chunk * word, p)),
         hedge=_sat32(hedge),
-        reduce=_sat32(NUM_SCALAR_REDUCES * allreduce_wire_bytes(word, p)),
+        reduce=_sat32(
+            NUM_SCALAR_REDUCES * allreduce_wire_bytes(word, p)
+            + (allreduce_wire_bytes(n * word, p) if per_vertex else 0)
+        ),
         bfs_sweeps=jnp.asarray(sweeps, jnp.int32),
     )
 
@@ -249,7 +257,11 @@ def _price_site(name, eqn, aval, nbytes, *, n, p, in_while, trips,
         phase, per_run = "hedge", ppermute_wire_bytes(nbytes, cross)
     elif name in _REDUCE_PRIMS:
         vol = allreduce_wire_bytes(nbytes, p)
-        if math.prod(aval.shape) >= n:
+        # BFS level syncs are pmax (seeding fixed, frontier per-sweep
+        # inside the while loop); an n-vector *psum* outside the loop is
+        # the per-vertex credit reduction and belongs to "reduce" —
+        # size alone cannot separate the two once attribution is on
+        if math.prod(aval.shape) >= n and (in_while or name != "psum"):
             phase = "bfs"
             if in_while:
                 per_run, per_sweep = 0, vol
@@ -319,6 +331,7 @@ def measure_tc_comm(
     hplan=None,
     axis_name: str = "p",
     check_hlo: bool = True,
+    per_vertex: bool = False,
 ) -> list[CollectiveSite]:
     """Lower the Algorithm 2 shard program for a (n, 2m)-sized graph on
     ``p`` devices and inventory its collectives (no graph data needed —
@@ -341,11 +354,11 @@ def measure_tc_comm(
     fn, cap_edges = build_tc_shard_fn(
         n=n, m2=m2, p=p, axis_name=axis_name, slack=slack, d_pad=d_pad,
         mode=mode, hedge_chunk=hedge_chunk, frontier_dtype=frontier_dtype,
-        hplan=hplan,
+        hplan=hplan, per_vertex=per_vertex,
     )
     shard = shard_map(
         fn, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
-        out_specs=result_out_specs(axis_name),
+        out_specs=result_out_specs(axis_name, per_vertex=per_vertex),
     )
     spec = jax.ShapeDtypeStruct((p * cap_edges,), jnp.int32)
     sites = collect_collective_sites(
@@ -374,6 +387,7 @@ def comm_report(
     n_levels_model: int | None = None,
     mesh=None,
     check_hlo: bool = True,
+    per_vertex: bool = False,
 ) -> dict:
     """Per-phase ``{measured, tally, modeled}`` wire bytes for one
     Algorithm 2 configuration — the modeled-vs-measured closing of the
@@ -389,17 +403,19 @@ def comm_report(
     sites = measure_tc_comm(
         n, m2, p, mesh=mesh, mode=mode, hedge_chunk=hedge_chunk,
         frontier_dtype=frontier_dtype, slack=slack, check_hlo=check_hlo,
+        per_vertex=per_vertex,
     )
     measured = measured_phase_bytes(sites, sweeps=sweeps)
     tally = tally_comm(
         n=n, p=p, cap_chunk=cap_chunk, cap_hedge=cap_hedge, mode=mode,
         frontier_dtype=frontier_dtype, sweeps=int(sweeps),
+        per_vertex=per_vertex,
     ).phase_bytes()
     modeled = wire_bytes_report(
         n, p, cap_chunk=cap_chunk, cap_hedge=cap_hedge,
         n_levels=int(n_levels_model if n_levels_model is not None
                      else sweeps),
-        mode=mode, frontier_dtype=frontier_dtype,
+        mode=mode, frontier_dtype=frontier_dtype, per_vertex=per_vertex,
     )
     return {
         "n": n, "m2": m2, "p": p, "mode": mode, "sweeps": int(sweeps),

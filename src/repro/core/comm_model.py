@@ -213,6 +213,7 @@ def wire_bytes_report(
     n_levels: int,
     mode: str = "allgather",
     frontier_dtype: str = "int32",
+    per_vertex: bool = False,
 ) -> dict[str, float]:
     """Bytes our ``parallel_tc`` implementation moves (int32 wire), per
     phase (keys = ``WIRE_PHASES``), per full algorithm run, summed over
@@ -231,7 +232,10 @@ def wire_bytes_report(
     envelope.  ``mode`` is accepted for interface symmetry: the ring
     spelling's (p-1) rounds of p-cycle ppermutes move exactly the
     all-gather volume (the paper's equivalence, asserted by the
-    instrument tests)."""
+    instrument tests).  ``per_vertex`` adds the attribution feature's
+    n-vector credit psum to the reduce phase (the scalar-reduce count
+    ``NUM_SCALAR_REDUCES`` is unchanged — the credit reduce is the one
+    vector-valued member of the reduction phase)."""
     import numpy as np
 
     word = 4
@@ -253,6 +257,8 @@ def wire_bytes_report(
         # horizontal rounds: two buffers of cap_hedge words visit every
         # other device once — all-gather and ring spell it identically
         "hedge": 2 * allgather_wire_bytes(cap_hedge * word, p),
-        # the scalar overflow pmaxes + count psums
-        "reduce": NUM_SCALAR_REDUCES * allreduce_wire_bytes(word, p),
+        # the scalar overflow pmaxes + count psums, plus (opt-in) the
+        # per-vertex credit psum over the n-vector
+        "reduce": NUM_SCALAR_REDUCES * allreduce_wire_bytes(word, p)
+        + (allreduce_wire_bytes(n * word, p) if per_vertex else 0),
     }

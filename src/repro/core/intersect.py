@@ -336,11 +336,18 @@ class EngineCounts(NamedTuple):
     bounded plans set it instead of silently undercounting, and exact
     plans only set it under an explicit ``d_cap``/``d_max`` clamp (the
     documented lossy candidate truncation, where it marks the clipped
-    hub queries)."""
+    hub queries).
+
+    ``per_vertex`` is ``None`` unless the run was asked for attribution
+    (``run_plan(..., per_vertex=True)``): an int32[n_nodes + 1] credit
+    vector under the exactly-once rule (see ``run_plan``), slot
+    ``n_nodes`` being the sentinel bucket that real vertices never
+    receive credit in."""
 
     c1: jnp.ndarray
     c2: jnp.ndarray
     overflow: jnp.ndarray
+    per_vertex: jnp.ndarray | None = None
 
 
 def _swapped_bounds(su, lu, sw, lw, row_ok):
@@ -404,19 +411,109 @@ def _probe_rows(adj, qu, qw, row_ok, *, d_cand, d_targ, backend, interpret,
     return cand, found & row_ok[:, None], overflow
 
 
+def _chunk_credit(n, cand, found, end_rows, qu_c, qw_c):
+    """int32[n + 1] per-vertex triangle credit for one probed chunk.
+
+    Exactly-once rule: every hit credits its apex (the witness vertex in
+    ``cand``); ``end_rows`` — the per-row count of hits whose triangle is
+    seen ONLY at this horizontal edge (diff-level hits under Algorithm 1,
+    all hits under Algorithm 2's N-hat dedup) — additionally credits the
+    edge endpoints ``qu``/``qw``.  Same-level hits credit the apex alone
+    because an all-same-level triangle surfaces once per corner across
+    its three horizontal edges.  Scatters go through
+    ``repro.graph.segment.segment_sum``: ``CAND_PAD`` (-1) apex slots
+    are out-of-range and dropped natively, sentinel endpoints (``n``)
+    land in the throwaway slot ``n``.
+
+    This element-wise scatter is the dense reference path
+    (``core.sequential.triangle_count_dense``); ``run_plan`` itself uses
+    the slot-accumulator formulation below (``_ends_credit`` +
+    windowed apex adds), which is an order of magnitude cheaper on the
+    padded probe volume but needs the adjacency's flat layout."""
+    from repro.graph.segment import segment_sum
+
+    apex = segment_sum(
+        found.astype(jnp.int32).reshape(-1), cand.reshape(-1), n + 1
+    )
+    ends = (
+        segment_sum(end_rows, qu_c, n + 1)
+        + segment_sum(end_rows, qw_c, n + 1)
+    )
+    return apex + ends
+
+
+def _ends_credit(n, end_rows, qu_c, qw_c):
+    """Endpoint half of the exactly-once rule: ``end_rows`` hits per row
+    credit both edge endpoints (tiny scatters — one element per query
+    row).  Sentinel endpoints (``n``) land in the throwaway slot."""
+    from repro.graph.segment import segment_sum
+
+    return segment_sum(end_rows, qu_c, n + 1) + segment_sum(
+        end_rows, qw_c, n + 1
+    )
+
+
+_APEX_SCATTER_DIMS = jax.lax.ScatterDimensionNumbers(
+    update_window_dims=(1,),
+    inserted_window_dims=(),
+    scatter_dims_to_operand_dims=(0,),
+)
+
+
+def _apex_window_add(acc, s_s, found):
+    """Accumulate one chunk's hit mask into the flat-slot accumulator.
+
+    Candidates are gathered in adjacency order — ``cand[r, j] ==
+    adj.flat[s_s[r] + j]`` — so each row's hits map onto one contiguous
+    window of ``adj.flat`` slots.  A windowed ``scatter_add`` (one index
+    per ROW, not per cell) is what makes attribution cheap: XLA applies
+    each window as a vectorized slice-add, ~30x faster than the naive
+    per-cell scatter over the padded probe volume.  Padding cells carry
+    ``found == False`` (the probe masks ``cand < 0`` and rows past
+    ``count``), so over-wide windows add zeros; ``acc`` is padded by the
+    plan's max candidate width so no window is out of bounds."""
+    return jax.lax.scatter_add(
+        acc, s_s[:, None], found.astype(jnp.int32), _APEX_SCATTER_DIMS,
+        indices_are_sorted=False, unique_indices=False,
+        mode=jax.lax.GatherScatterMode.FILL_OR_DROP,
+    )
+
+
+def _apex_from_slots(adj, slot_acc):
+    """Fold the flat-slot accumulator into per-vertex apex credit: slot
+    ``e`` of ``adj.flat`` holds the hit count of the neighbor stored
+    there, so one ``m``-element segment-sum by neighbor id finishes the
+    job (~m elements, vs the ~sum(rows * width) padded probe volume).
+    Out-of-range flat entries (transpose/batch padding) route to the
+    sentinel slot ``n``; they can only ever carry zero anyway (no real
+    probe window covers them with a hit)."""
+    from repro.graph.segment import segment_sum
+
+    n = adj.n_nodes
+    m = adj.flat.shape[0]
+    ids = adj.flat[:m]
+    ids = jnp.where((ids >= 0) & (ids < n), ids, n)
+    return segment_sum(slot_acc[:m], ids, n + 1)
+
+
 def _count_chunk(
     adj, qu_c, qw_c, bounds_c, base, count,
-    *, d_cand, d_targ, level, backend, interpret,
+    *, d_cand, d_targ, level, backend, interpret, per_vertex=False,
+    acc=None,
 ):
-    """Summed (c1, c2, overflow) for one chunk of bucket rows.  ``base``
-    is the chunk's offset within the bucket (masks rows past ``count``);
-    ``bounds_c`` the chunk's precomputed endpoint bounds."""
+    """Summed (c1, c2, overflow, ends, acc) for one chunk of bucket rows.
+    ``base`` is the chunk's offset within the bucket (masks rows past
+    ``count``); ``bounds_c`` the chunk's precomputed endpoint bounds.
+    With ``per_vertex``, ``ends`` is the chunk's endpoint credit
+    (``_ends_credit``) and ``acc`` is returned with the chunk's apex hits
+    window-added (``_apex_window_add``); both are ``None``/passed-through
+    otherwise."""
     n = adj.n_nodes
     pos = base + jnp.arange(qu_c.shape[0], dtype=jnp.int32)
     row_ok = (pos < count) & (qu_c < n) & (qw_c < n)
     # data-derived zero: keeps fori_loop carries device-varying in shard_map
     zero = (qu_c[0] ^ qu_c[0]).astype(jnp.int32)
-    if backend == "pallas":
+    if backend == "pallas" and not per_vertex:
         # counting stays fully on-kernel: no per-candidate mask leaves VMEM
         from repro.kernels.intersect.intersect import (
             intersect_pallas,
@@ -430,7 +527,7 @@ def _count_chunk(
         )
         if level is None:
             cnt = intersect_pallas_count(cand, targ, interpret=interpret)
-            return jnp.sum(cnt, dtype=jnp.int32), zero, overflow
+            return jnp.sum(cnt, dtype=jnp.int32), zero, overflow, None, acc
         lev_ext = jnp.concatenate([level, jnp.full((1,), -7, jnp.int32)])
         lev_c = jnp.where(cand >= 0, lev_ext[jnp.clip(cand, 0, n)], -7)
         lev_u = jnp.where(qu_c < n, lev_ext[jnp.clip(qu_c, 0, n)], -9)
@@ -441,24 +538,47 @@ def _count_chunk(
             jnp.sum(c1, dtype=jnp.int32),
             jnp.sum(c2, dtype=jnp.int32),
             overflow,
+            None,
+            acc,
         )
+    # attribution needs the hit mask, so the pallas backend routes through
+    # its mask kernel (intersect_pallas_hits) here; counts derived from the
+    # mask are the same integer sums the count kernels produce
     cand, found, overflow = _probe_rows(
         adj, qu_c, qw_c, row_ok,
         d_cand=d_cand, d_targ=d_targ, backend=backend, interpret=interpret,
         bounds=bounds_c,
     )
+    if per_vertex:
+        # cand rows are windows of adj.flat starting at the small side's
+        # slice start — recompute it (cheap row-vector math) and add the
+        # hit mask into the slot accumulator
+        s_s = _swapped_bounds(*bounds_c, row_ok)[0]
+        acc = _apex_window_add(acc, s_s, found)
     if level is None:
-        return jnp.sum(found, dtype=jnp.int32), zero, overflow
+        hit_rows = jnp.sum(found, axis=1, dtype=jnp.int32)
+        ends = (
+            _ends_credit(n, hit_rows, qu_c, qw_c) if per_vertex else None
+        )
+        return jnp.sum(hit_rows, dtype=jnp.int32), zero, overflow, ends, acc
     lev_ext = jnp.concatenate([level, jnp.full((1,), -1, jnp.int32)])
     lev_apex = lev_ext[jnp.clip(cand, 0, n)]
     lev_u = lev_ext[jnp.clip(qu_c, 0, n)]
     same = found & (lev_apex == lev_u[:, None])
     c2 = jnp.sum(same, dtype=jnp.int32)
     c1 = jnp.sum(found, dtype=jnp.int32) - c2
-    return c1, c2, overflow
+    ends = None
+    if per_vertex:
+        diff_rows = jnp.sum(found, axis=1, dtype=jnp.int32) - jnp.sum(
+            same, axis=1, dtype=jnp.int32
+        )
+        ends = _ends_credit(n, diff_rows, qu_c, qw_c)
+    return c1, c2, overflow, ends, acc
 
 
-def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
+def run_plan(
+    adj, qu, qw, plan: IntersectPlan, *, level=None, per_vertex=False
+) -> EngineCounts:
     """Execute a bucket plan against an adjacency view.
 
     ``qu``/``qw`` are the query endpoints (entries ``>= adj.n_nodes`` are
@@ -480,10 +600,25 @@ def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
     split into the paper's
     (c1, c2) by apex level; without, every hit counts once (Algorithm 2's
     exactly-once semantics after N-hat dedup).
+
+    With ``per_vertex=True`` the probe additionally scatter-adds triangle
+    credit in-trace (no second pass): every hit credits its apex, and
+    hits whose triangle is visible only at this edge (diff-level hits
+    under ``level``; all hits without it) also credit both edge
+    endpoints.  The result's ``per_vertex`` is int32[n + 1] — slot ``n``
+    absorbs sentinel-row credit and must be dropped by the caller — and
+    satisfies ``sum(per_vertex[:n]) == 3 * triangles`` exactly (each
+    triangle's three corners each earn exactly one credit; DESIGN.md
+    "Per-vertex attribution").  The pallas backend switches from its
+    count kernels to the hit-mask kernel for this, keeping integer
+    parity with the jnp probe.
     """
     if qu.shape[0] == 0 or not plan.buckets:
         z = jnp.int32(0)
-        return EngineCounts(z, z, jnp.zeros((), bool))
+        pv = (
+            jnp.zeros((adj.n_nodes + 1,), jnp.int32) if per_vertex else None
+        )
+        return EngineCounts(z, z, jnp.zeros((), bool), pv)
     n = adj.n_nodes
     need = plan.total_rows
     if qu.shape[0] < need:
@@ -504,6 +639,16 @@ def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
         su, lu, sw, lw = su[order], lu[order], sw[order], lw[order]
     zero = (qu[0] ^ qu[0]).astype(jnp.int32)  # device-varying under shard_map
     c1, c2, ovf = zero, zero, zero != 0
+    # note: sort_queries permutes the credit *scatter indices* along with
+    # the queries — values travel with the sort, so attribution is
+    # permutation-invariant
+    credit = acc = None
+    if per_vertex:
+        credit = jnp.zeros((n + 1,), jnp.int32) + zero
+        # apex hits land in adjacency-slot space (see _apex_window_add);
+        # the tail pad keeps every probe window in bounds
+        w_max = max(b.d_cand for b in plan.buckets)
+        acc = jnp.zeros((adj.flat.shape[0] + w_max,), jnp.int32) + zero
     for b in plan.buckets:
         sliced = tuple(
             jax.lax.slice_in_dim(x, b.start, b.start + b.rows)
@@ -516,30 +661,42 @@ def run_plan(adj, qu, qw, plan: IntersectPlan, *, level=None) -> EngineCounts:
                 f"query_chunk={chunk} (plan the rows with row_mult=chunk)"
             )
         if chunk == b.rows:
-            d1, d2, do = _count_chunk(
+            d1, d2, do, dc, acc = _count_chunk(
                 adj, sliced[0], sliced[1], sliced[2:], 0, b.count,
                 d_cand=b.d_cand, d_targ=b.d_targ, level=level,
                 backend=plan.backend, interpret=plan.interpret,
+                per_vertex=per_vertex, acc=acc,
             )
             c1, c2, ovf = c1 + d1, c2 + d2, ovf | do
+            if per_vertex:
+                credit = credit + dc
         else:
             def body(c, carry, sliced=sliced, b=b, chunk=chunk):
-                a1, a2, o = carry
+                a1, a2, o = carry[:3]
                 sl = tuple(
                     jax.lax.dynamic_slice(x, (c * chunk,), (chunk,))
                     for x in sliced
                 )
-                d1, d2, do = _count_chunk(
+                d1, d2, do, dc, a_out = _count_chunk(
                     adj, sl[0], sl[1], sl[2:], c * chunk, b.count,
                     d_cand=b.d_cand, d_targ=b.d_targ, level=level,
                     backend=plan.backend, interpret=plan.interpret,
+                    per_vertex=per_vertex,
+                    acc=carry[4] if per_vertex else None,
                 )
-                return a1 + d1, a2 + d2, o | do
+                out = (a1 + d1, a2 + d2, o | do)
+                return out + (
+                    (carry[3] + dc, a_out) if per_vertex else ()
+                )
 
-            c1, c2, ovf = jax.lax.fori_loop(
-                0, b.rows // chunk, body, (c1, c2, ovf)
-            )
-    return EngineCounts(c1, c2, ovf)
+            init = (c1, c2, ovf) + ((credit, acc) if per_vertex else ())
+            res = jax.lax.fori_loop(0, b.rows // chunk, body, init)
+            c1, c2, ovf = res[:3]
+            if per_vertex:
+                credit, acc = res[3], res[4]
+    if per_vertex:
+        credit = credit + _apex_from_slots(adj, acc)
+    return EngineCounts(c1, c2, ovf, credit)
 
 
 # ------------------------------------------------- probe-level wrappers

@@ -71,15 +71,20 @@ class ParallelTCResult:
     hedge_overflow: jnp.ndarray
     recv_counts: jnp.ndarray  # transposed elements per device
     comm: CommTally           # per-phase wire bytes this run moved
+    per_vertex: jnp.ndarray | None = None  # int32[n] exactly-once credit
+    #   (psum over shards, replicated); None unless per_vertex was
+    #   requested — sum == 3 * triangles
 
 
-def result_out_specs(axis_name: str = "p"):
+def result_out_specs(axis_name: str = "p", per_vertex: bool = False):
     """``shard_map`` out_specs pytree for ``_tc_shard``'s result —
     per-device fields sharded over ``axis_name``, everything else
     (scalars + the comm tally) replicated.  The ONE definition shared
     by ``parallel_triangle_count``, the dry-run registry and the comm
     instrument, so adding a result field cannot silently desynchronize
-    them."""
+    them.  ``per_vertex`` must match the shard fn's flag: the spec
+    pytree has to mirror the result's (``None`` when attribution is
+    off, a replicated vector — it is psummed in the body — when on)."""
     rep = P()
     return ParallelTCResult(
         triangles=rep,
@@ -92,6 +97,7 @@ def result_out_specs(axis_name: str = "p"):
         comm=CommTally(
             **{f.name: rep for f in dataclasses.fields(CommTally)}
         ),
+        per_vertex=rep if per_vertex else None,
     )
 
 
@@ -214,6 +220,7 @@ def _tc_shard(
     axis_name: str,
     mode: str = "allgather",
     frontier_dtype: str = "int32",
+    per_vertex: bool = False,
 ):
     """Per-device body. ``src_i/dst_i`` int32[cap_edges] sentinel-padded.
 
@@ -265,9 +272,10 @@ def _tc_shard(
         # one collective, volume k·m·p — identical to the paper's p rounds
         all_hv = jax.lax.all_gather(hv, axis_name).reshape(-1)
         all_hw = jax.lax.all_gather(hw, axis_name).reshape(-1)
-        eng = run_plan(adj, all_hv, all_hw, hplan)
+        eng = run_plan(adj, all_hv, all_hw, hplan, per_vertex=per_vertex)
         t_i = t0 + eng.c1
         d_ovf = o0 | eng.overflow
+        credit = eng.per_vertex
     elif mode == "ring":
         # probe the local shard, then p-1 ppermute rounds: O(cap_hedge)
         # memory, intersection of round r overlaps with the transfer of
@@ -276,19 +284,24 @@ def _tc_shard(
         # k·m wire for nothing (and breaking the wire-volume equality
         # with allgather mode that the comm instrument asserts).
         perm = [(i, (i + 1) % p) for i in range(p)]
-        eng0 = run_plan(adj, hv, hw, hplan)
+        eng0 = run_plan(adj, hv, hw, hplan, per_vertex=per_vertex)
 
         def round_body(r, carry):
-            t, o, cv, cw = carry
+            t, o, cv, cw = carry[:4]
             cv = jax.lax.ppermute(cv, axis_name, perm)
             cw = jax.lax.ppermute(cw, axis_name, perm)
-            eng = run_plan(adj, cv, cw, hplan)
-            return t + eng.c1, o | eng.overflow, cv, cw
+            eng = run_plan(adj, cv, cw, hplan, per_vertex=per_vertex)
+            out = (t + eng.c1, o | eng.overflow, cv, cw)
+            return out + (
+                (carry[4] + eng.per_vertex,) if per_vertex else ()
+            )
 
-        t_i, d_ovf, _, _ = jax.lax.fori_loop(
-            0, p - 1, round_body,
-            (t0 + eng0.c1, o0 | eng0.overflow, hv, hw)
+        init = (t0 + eng0.c1, o0 | eng0.overflow, hv, hw) + (
+            (eng0.per_vertex,) if per_vertex else ()
         )
+        res = jax.lax.fori_loop(0, p - 1, round_body, init)
+        t_i, d_ovf = res[0], res[1]
+        credit = res[4] if per_vertex else None
     else:
         raise ValueError(mode)
 
@@ -296,6 +309,13 @@ def _tc_shard(
 
     # ---- line 44: reduction -------------------------------------------
     T = jax.lax.psum(t_i, axis_name)
+    # per-vertex credit is shard-local partials under N-hat's exactly-once
+    # semantics: one n-vector psum (the "one extra collective" of the
+    # attribution feature — priced as phase "reduce" by the tally AND
+    # the HLO pricer; drop the engine's sentinel slot before reducing)
+    pv = (
+        jax.lax.psum(credit[:n], axis_name) if per_vertex else None
+    )
     n_h = jax.lax.psum(n_h_local, axis_name)
     m = jax.lax.psum(jnp.sum(valid & (src_i < dst_i), dtype=jnp.int32), axis_name)
     k = n_h / jnp.maximum(m, 1)
@@ -306,6 +326,7 @@ def _tc_shard(
     comm = tally_comm(
         n=n, p=p, cap_chunk=cap_chunk, cap_hedge=cap_hedge, mode=mode,
         frontier_dtype=frontier_dtype, sweeps=sweeps,
+        per_vertex=per_vertex,
     )
     return ParallelTCResult(
         triangles=T,
@@ -316,6 +337,7 @@ def _tc_shard(
         hedge_overflow=hedge_overflow,
         recv_counts=rep.count.reshape(1),
         comm=comm,
+        per_vertex=pv,
     )
 
 
@@ -334,6 +356,7 @@ def build_tc_shard_fn(
     hplan: IntersectPlan | None = None,
     intersect_backend: str = "jnp",
     interpret: bool = True,
+    per_vertex: bool = False,
 ):
     """Shard function + static capacities for a graph of (n, 2m) size —
     usable for dry-run lowering with ShapeDtypeStructs (no graph data).
@@ -362,7 +385,7 @@ def build_tc_shard_fn(
     fn = functools.partial(
         _tc_shard, n=n, p=p, root=root, cap_chunk=cap_chunk,
         cap_hedge=cap_hedge, hplan=hplan, axis_name=axis_name, mode=mode,
-        frontier_dtype=frontier_dtype,
+        frontier_dtype=frontier_dtype, per_vertex=per_vertex,
     )
     return fn, cap_edges
 
@@ -404,13 +427,13 @@ def _parallel_triangle_count(
         n=g.n_nodes, m2=m2, p=p, axis_name=axis_name, root=root, slack=slack,
         d_pad=d_pad, mode=mode, hedge_chunk=hedge_chunk, hplan=hplan,
         intersect_backend=backend, interpret=interpret,
-        frontier_dtype=frontier_dtype,
+        frontier_dtype=frontier_dtype, per_vertex=bool(o.per_vertex),
     )
     shard = shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name)),
-        out_specs=result_out_specs(axis_name),
+        out_specs=result_out_specs(axis_name, per_vertex=bool(o.per_vertex)),
     )
     sharding = NamedSharding(mesh, P(axis_name))
     s_dev = jax.device_put(jnp.asarray(s_sh.reshape(-1)), sharding)

@@ -60,6 +60,7 @@ from repro.core.intersect import (
     DEFAULT_BUCKET_WIDTHS,
     CsrAdjacency,
     IntersectPlan,
+    _chunk_credit,
     plan_buckets,
     plan_buckets_bounded,
     probe_block,
@@ -93,6 +94,10 @@ class TCResult:
     #   (cap_h truncation, a foreign plan's short row coverage) or a
     #   width clamp truncated candidate lists (d_max / a violated
     #   bounded-plan bound) — any way a count can be less than exact
+    per_vertex: jnp.ndarray | None = None  # int32[(B,) n] exactly-once
+    #   triangle credit per vertex (sum == 3 * triangles); None unless
+    #   requested via TCOptions(per_vertex=True) — budget-padding rows
+    #   carry zero credit by construction (sentinel slot dropped)
 
 
 def _lane_plan(g: Graph, *, root: int):
@@ -121,18 +126,23 @@ def _plan_batch(gview: Graph, root: int):
     return level, qu, qw, jnp.max(ds, 0), jnp.max(dl, 0), n_h, k
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _run_batch(gview: Graph, qu, qw, level, plan: IntersectPlan):
+@functools.partial(jax.jit, static_argnames=("plan", "per_vertex"))
+def _run_batch(gview: Graph, qu, qw, level, plan: IntersectPlan,
+               per_vertex: bool = False):
     """Stage 2 of the exact path: vmapped ``run_plan`` over the lanes
     with the (static) shared plan closed over."""
     def lane(g, u, w, lev):
-        return run_plan(CsrAdjacency.from_graph(g), u, w, plan, level=lev)
+        return run_plan(
+            CsrAdjacency.from_graph(g), u, w, plan, level=lev,
+            per_vertex=per_vertex,
+        )
 
     return jax.vmap(lane)(gview, qu, qw, level)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "root"))
-def _tc_batch_fused(gview: Graph, plan: IntersectPlan, root: int):
+@functools.partial(jax.jit, static_argnames=("plan", "root", "per_vertex"))
+def _tc_batch_fused(gview: Graph, plan: IntersectPlan, root: int,
+                    per_vertex: bool = False):
     """The serving hot path: BFS + compaction + probing in ONE jit.
 
     Valid only with a plan known before trace time (the bounded
@@ -141,7 +151,10 @@ def _tc_batch_fused(gview: Graph, plan: IntersectPlan, root: int):
         # same plan pass as the exact path (_lane_plan) — one source of
         # truth; the unused degree profile is dead-code-eliminated by XLA
         level, qu, qw, _, _, n_h, k = _lane_plan(g, root=root)
-        eng = run_plan(CsrAdjacency.from_graph(g), qu, qw, plan, level=level)
+        eng = run_plan(
+            CsrAdjacency.from_graph(g), qu, qw, plan, level=level,
+            per_vertex=per_vertex,
+        )
         return level, n_h, k, eng
 
     return jax.vmap(lane)(gview)
@@ -286,7 +299,9 @@ def _triangle_count_batch(
                 "d_max/cap_h only apply to exact planning; a precomputed "
                 "plan fixes coverage and widths"
             )
-        level, n_h, k, eng = _tc_batch_fused(gview, plan, root)
+        level, n_h, k, eng = _tc_batch_fused(
+            gview, plan, root, per_vertex=bool(o.per_vertex)
+        )
         # coverage is the plan's contract: a lane with more horizontal
         # queries than the plan probes must flag, not silently undercount
         # (can't happen with a plan from THIS batch's true-bound meta,
@@ -298,7 +313,9 @@ def _triangle_count_batch(
             gview, root, o.cap_h, o.bucket_widths, o.d_max, row_mult,
             backend, interpret, o.query_chunk,
         )
-        eng = _run_batch(gview, qu, qw, level, plan)
+        eng = _run_batch(
+            gview, qu, qw, level, plan, per_vertex=bool(o.per_vertex)
+        )
         h_ovf = (n_h > h_used) | eng.overflow
     return TCResult(
         triangles=eng.c1 + eng.c2 // 3,
@@ -311,6 +328,10 @@ def _triangle_count_batch(
         probe_cells=jnp.asarray(plan.probe_cells, jnp.float32),
         peak_rows=jnp.asarray(plan.peak_rows, jnp.int32),
         h_overflow=h_ovf,
+        # drop the engine's sentinel slot: [B, n_budget + 1] -> [B, n_budget]
+        per_vertex=(
+            eng.per_vertex[:, :-1] if eng.per_vertex is not None else None
+        ),
     )
 
 
@@ -368,6 +389,9 @@ def _squeeze_lane(res: TCResult) -> TCResult:
         levels=res.levels[0], probe_rows=res.probe_rows,
         probe_cells=res.probe_cells, peak_rows=res.peak_rows,
         h_overflow=res.h_overflow[0],
+        per_vertex=(
+            res.per_vertex[0] if res.per_vertex is not None else None
+        ),
     )
 
 
@@ -463,6 +487,14 @@ def triangle_count_dense(g: Graph, *, d_max: int, root: int = 0) -> TCResult:
     diff = found & (lev_apex != lev_u[:, None])
     c1 = jnp.sum(diff, dtype=jnp.int32)
     c2 = jnp.sum(same, dtype=jnp.int32)
+    # the dense reference computes attribution unconditionally (it IS a
+    # reference): same exactly-once rule as the compacted engine — the
+    # probe's sentinel-padded apexes (n) and sentinel queries land in
+    # slot n and are dropped
+    credit = _chunk_credit(
+        g.n_nodes, cand, found,
+        jnp.sum(diff, axis=1, dtype=jnp.int32), qu, qw,
+    )
     return TCResult(
         triangles=c1 + c2 // 3,
         c1=c1,
@@ -474,6 +506,7 @@ def triangle_count_dense(g: Graph, *, d_max: int, root: int = 0) -> TCResult:
         probe_cells=jnp.float32(float(g.num_slots) * d_max),
         peak_rows=jnp.int32(g.num_slots),
         h_overflow=jnp.asarray(False),
+        per_vertex=credit[: g.n_nodes],
     )
 
 

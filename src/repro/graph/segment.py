@@ -17,18 +17,34 @@ import jax.numpy as jnp
 
 
 def segment_sum(data, segment_ids, num_segments: int):
+    """Sum of ``data`` rows grouped by ``segment_ids``.
+
+    Sentinel convention (framework-wide): ids outside
+    ``[0, num_segments)`` — the padded-edge/bag sentinel ``num_segments``
+    and the negative pads like the intersection engine's ``CAND_PAD`` —
+    are dropped by the underlying scatter and contribute nothing.  The
+    triangle pipeline's per-vertex credit scatters rely on exactly this
+    (``core.intersect._chunk_credit``)."""
     return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
 
 
 def segment_max(data, segment_ids, num_segments: int):
+    """Max per segment; empty segments hold the dtype's identity
+    (``-inf`` for floats, the minimum for ints).  Same sentinel
+    convention as ``segment_sum``."""
     return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
 
 
-def segment_mean(data, segment_ids, num_segments: int, *, eps: float = 1e-9):
+def segment_mean(data, segment_ids, num_segments: int):
+    """Mean per segment; **empty segments are exactly 0** (not the
+    historical ``0 / eps`` noise — the count is clamped at 1, which
+    changes nothing for non-empty segments since their count is >= 1).
+    Same sentinel convention as ``segment_sum``: out-of-range ids join
+    neither the sum nor the count."""
     s = segment_sum(data, segment_ids, num_segments)
     ones = jnp.ones(data.shape[:1], dtype=s.dtype)
     cnt = segment_sum(ones, segment_ids, num_segments)
-    cnt = jnp.maximum(cnt, eps)
+    cnt = jnp.maximum(cnt, 1)
     return s / cnt.reshape(cnt.shape + (1,) * (s.ndim - 1))
 
 

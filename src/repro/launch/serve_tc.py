@@ -101,6 +101,12 @@ class TriangleAnalytics:
     #: the wedge-sampling ``ApproxEstimate`` (point estimate, stderr,
     #: 95% CI) when ``route == "approx"`` — the error bar IS the answer
     approx: Optional[object] = None
+    #: per-vertex triangle counts (int array[n_nodes], the request's own
+    #: vertices — batched lanes are sliced out of the budget-padded
+    #: batch) when the engine ran with ``TCOptions(per_vertex=True)``;
+    #: ``None`` otherwise, and ALWAYS ``None`` on the approx route — an
+    #: estimate carries no attribution
+    per_vertex: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -487,6 +493,7 @@ class TriangleServer:
             overflow=report.overflow.any,
             route="distributed",
             report=report,
+            per_vertex=report.per_vertex,
         ))
 
     def _run_distributed(self, g, opts, rid: int, attempt: int):
@@ -602,10 +609,13 @@ class TriangleServer:
     def _finalize_one(self) -> None:
         reqs, budget, res, t_flush = self._inflight.popleft()
         try:
-            tri, c1, c2, nh, k, ovf = jax.device_get(
-                (res.triangles, res.c1, res.c2, res.num_horizontal, res.k,
-                 res.h_overflow)
-            )
+            fields = (res.triangles, res.c1, res.c2, res.num_horizontal,
+                      res.k, res.h_overflow)
+            if res.per_vertex is not None:
+                fields += (res.per_vertex,)
+            got = jax.device_get(fields)
+            tri, c1, c2, nh, k, ovf = got[:6]
+            pv = got[6] if len(got) > 6 else None
         except Exception as exc:  # noqa: BLE001 — fetch failure: degrade
             self._fail_batch(reqs, budget, exc)
             return
@@ -630,6 +640,12 @@ class TriangleServer:
                 latency_s=done - r.t_submit,
                 budget=budget,
                 overflow=bool(ovf[i]),
+                # slice this request's vertices out of its budget-padded
+                # lane — padding vertices carry zero credit by construction
+                per_vertex=(
+                    np.asarray(pv[i][: r.n_nodes])
+                    if pv is not None else None
+                ),
             ))
 
     def summary(self) -> dict:

@@ -1,0 +1,76 @@
+"""Independent brute-force oracle for per-vertex triangle attribution.
+
+This module is the ground truth the engine is tested against, so it must
+share NO code with the reproduction: pure NumPy + Python sets, no ``repro``
+imports, no JAX.  The algorithm is the O(n * d^2) textbook one — for every
+undirected edge (u, w), every common neighbor v closes one triangle and v
+is its apex, so crediting the apex once per edge enumerates each triangle
+exactly three times total (once per corner).  No cover-edge machinery, no
+BFS levels, no orientation tricks.
+
+Input convention matches the generators: ``edges`` is an (m, 2) int array of
+possibly-duplicated, possibly-self-looped, either-direction pairs; the
+graph is the simple undirected graph they induce on ``n`` vertices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _simple_graph(edges, n: int):
+    """Dedup + drop self loops; returns (adj_sets, undirected_edge_set)."""
+    adj = [set() for _ in range(n)]
+    und = set()
+    for u, w in np.asarray(edges, dtype=np.int64).reshape(-1, 2):
+        u, w = int(u), int(w)
+        if u == w:
+            continue
+        a, b = (u, w) if u < w else (w, u)
+        if (a, b) in und:
+            continue
+        und.add((a, b))
+        adj[a].add(b)
+        adj[b].add(a)
+    return adj, und
+
+
+def triangle_counts(edges, n: int) -> np.ndarray:
+    """int64[n]: number of triangles each vertex participates in."""
+    adj, und = _simple_graph(edges, n)
+    t = np.zeros(n, dtype=np.int64)
+    for a, b in und:
+        for v in adj[a] & adj[b]:
+            t[v] += 1
+    return t
+
+
+def total_triangles(edges, n: int) -> int:
+    """Total triangle count; equals ``triangle_counts(...).sum() // 3``."""
+    s = int(triangle_counts(edges, n).sum())
+    assert s % 3 == 0, "every triangle must be credited exactly 3 times"
+    return s // 3
+
+
+def degrees(edges, n: int) -> np.ndarray:
+    """int64[n] simple-graph degrees (dedup'd, self loops dropped)."""
+    adj, _ = _simple_graph(edges, n)
+    return np.array([len(a) for a in adj], dtype=np.int64)
+
+
+def local_clustering(edges, n: int) -> np.ndarray:
+    """float64[n]: t(v) / C(d(v), 2), defined as 0 where d(v) < 2."""
+    t = triangle_counts(edges, n).astype(np.float64)
+    d = degrees(edges, n).astype(np.float64)
+    wedges = d * (d - 1.0) / 2.0
+    out = np.zeros(n, dtype=np.float64)
+    np.divide(t, wedges, out=out, where=wedges > 0)
+    return out
+
+
+def transitivity(edges, n: int) -> float:
+    """3T / #wedges (global clustering coefficient); 0.0 if wedge-free."""
+    d = degrees(edges, n).astype(np.float64)
+    wedges = float((d * (d - 1.0) / 2.0).sum())
+    if wedges == 0.0:
+        return 0.0
+    return float(triangle_counts(edges, n).sum()) / wedges
