@@ -22,7 +22,9 @@ no argument runs everything.
               trace, approximate-lane error bound, and the chaos
               invariant under fault injection; writes
               ``results/BENCH_robust.json``.  ``robust_smoke`` is the
-              CI variant (smaller trace, same JSON)
+              CI variant (smaller trace; writes the untracked
+              ``results/BENCH_robust_smoke.json`` so the tracked
+              trajectory is never overwritten)
   pervertex-> per-vertex attribution overhead vs counts-only on the
               scale-12 fixture (must stay <= 15%); writes
               ``results/BENCH_pervertex.json``
@@ -33,7 +35,8 @@ no argument runs everything.
               p in {1, 2, 4, 8} on scale-10/12 RMAT (subprocess, 8 host
               devices) + the k·m·p hedge-volume scaling curve; writes
               ``results/BENCH_comm.json``.  ``comm_smoke`` is the CI
-              variant (scale 10, p = 4 only, same JSON)
+              variant (scale 10, p = 4 only; writes the untracked
+              ``results/BENCH_comm_smoke.json``)
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -138,10 +141,14 @@ def bench_comm(smoke: bool = False):
     """Measured-vs-modeled communication accounting (DESIGN.md §5):
     the comm instrument's per-phase volumes against the analytic tally
     and the closed-form wire model, p in {1, 2, 4, 8}, plus the hedge
-    scaling curve.  Writes ``results/BENCH_comm.json``."""
-    json_out = os.path.normpath(
-        os.path.join(_ROOT, "results", "BENCH_comm.json")
-    )
+    scaling curve.  Writes ``results/BENCH_comm.json`` — except in smoke
+    mode, which writes the untracked ``results/BENCH_comm_smoke.json``:
+    the full sweep is the perf trajectory tracked across PRs and a CI
+    subset must never overwrite it."""
+    json_out = os.path.normpath(os.path.join(
+        _ROOT, "results",
+        "BENCH_comm_smoke.json" if smoke else "BENCH_comm.json",
+    ))
     args = ("scales=(10,), ps=(4,)" if smoke
             else "scales=(10, 12), ps=(1, 2, 4, 8)")
     body = (
@@ -170,13 +177,16 @@ def bench_robust(smoke: bool = False):
     rate, and the chaos invariant (every request answered exactly once,
     structurally, under the full fault plan).  Writes
     ``results/BENCH_robust.json``; a violated claim exits nonzero.
-    ``robust_smoke`` is the CI variant (smaller trace, same JSON)."""
+    ``robust_smoke`` is the CI variant (smaller trace; writes the
+    untracked ``results/BENCH_robust_smoke.json`` so the tracked
+    trajectory is never overwritten)."""
     from benchmarks.robust_bench import measure_robust
 
-    out = os.path.join(_ROOT, "results", "BENCH_robust.json")
     if smoke:
+        out = os.path.join(_ROOT, "results", "BENCH_robust_smoke.json")
         measure_robust(num_requests=48, smoke=True, out=out)
     else:
+        out = os.path.join(_ROOT, "results", "BENCH_robust.json")
         measure_robust(num_requests=96, out=out)
 
 
@@ -240,9 +250,9 @@ def main(argv: list[str] | None = None) -> None:
     if unknown:
         sys.exit(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    # run-everything excludes comm_smoke: it would overwrite the full
-    # comm sweep's BENCH_comm.json with the CI subset
-    default = [n for n in BENCHES if n != "comm_smoke"]
+    # run-everything excludes the smoke lanes: they are strict CI
+    # subsets of comm/robust (and write separate *_smoke.json files)
+    default = [n for n in BENCHES if not n.endswith("_smoke")]
     for name in argv or default:
         BENCHES[name]()
 

@@ -744,8 +744,10 @@ def measure_serve(
     request set first, so compiles are excluded from the measured pass.
     Everything runs on ONE shared ``TriangleEngine`` (its plan cache and
     compile grid persist across the servers, as a deployment's would).
-    Writes the row to ``out`` (``results/BENCH_serve.json``) when given
-    and prints the benchmark-harness CSV lines.
+    Writes the row to ``out`` when given (``results/BENCH_serve.json``
+    for the full run; smoke invocations must use the untracked
+    ``results/BENCH_serve_smoke.json``) and prints the benchmark-harness
+    CSV lines.
     """
     from repro.api import TCOptions, TriangleEngine
 
@@ -853,14 +855,22 @@ def main(argv: Optional[list[str]] = None) -> None:
         description="Batched triangle-analytics serving benchmark/smoke"
     )
     ap.add_argument("--smoke", action="store_true",
-                    help="small fixed workload (CI); still writes --out")
+                    help="small fixed workload (CI); writes the untracked"
+                         " results/BENCH_serve_smoke.json unless --out"
+                         " is given")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=None)
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=os.path.join("results",
-                                                  "BENCH_serve.json"))
+    # smoke output must NOT land in BENCH_serve.json: that file is the
+    # full-run perf trajectory tracked across PRs (README "Benchmarks")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = os.path.join(
+            "results",
+            "BENCH_serve_smoke.json" if args.smoke else "BENCH_serve.json",
+        )
     num = args.requests or (24 if args.smoke else 96)
     sizes = tuple(args.batch_sizes or ((8,) if args.smoke else (1, 2, 8, 16)))
     row = measure_serve(
