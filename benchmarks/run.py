@@ -37,6 +37,15 @@ no argument runs everything.
               ``results/BENCH_comm.json``.  ``comm_smoke`` is the CI
               variant (scale 10, p = 4 only; writes the untracked
               ``results/BENCH_comm_smoke.json``)
+  tune     -> trace-driven autotuner acceptance (DESIGN.md §11): record
+              the serve-mix trace, successive-halving sweep of the plan
+              space (bit-identical counts asserted per config), persist
+              the winning TunedProfile to results/tuned/, and prove the
+              pre-warm contract (plan_hit == 1.0, zero post-warm jit
+              compiles) on a fresh engine; writes
+              ``results/BENCH_autotune.json``.  ``tune_smoke`` is the CI
+              variant (smaller trace + space; writes the untracked
+              ``results/BENCH_autotune_smoke.json``)
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -211,6 +220,23 @@ def bench_pervertex():
     measure_pervertex(scale=12, out=out)
 
 
+def bench_tune(smoke: bool = False):
+    """Autotuner acceptance (DESIGN.md §11): serve-mix trace -> sweep
+    (bit-identity asserted per config) -> persisted TunedProfile ->
+    pre-warm contract on a fresh engine.  A violated claim exits
+    nonzero.  Writes ``results/BENCH_autotune.json``; ``tune_smoke``
+    writes the untracked ``results/BENCH_autotune_smoke.json`` so the
+    tracked trajectory is never overwritten."""
+    from benchmarks.tune_bench import measure_tune
+
+    if smoke:
+        out = os.path.join(_ROOT, "results", "BENCH_autotune_smoke.json")
+        measure_tune(num_requests=32, smoke=True, out=out)
+    else:
+        out = os.path.join(_ROOT, "results", "BENCH_autotune.json")
+        measure_tune(num_requests=96, out=out)
+
+
 def bench_roofline():
     from benchmarks.roofline import RESULTS, analyze
 
@@ -240,6 +266,8 @@ BENCHES = {
     "pervertex": bench_pervertex,
     "comm": bench_comm,
     "comm_smoke": lambda: bench_comm(smoke=True),
+    "tune": bench_tune,
+    "tune_smoke": lambda: bench_tune(smoke=True),
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,148 @@
+"""Autotuner acceptance benchmark (DESIGN.md §11): record the serve-mix
+trace, sweep the plan space with successive halving, persist the winning
+profile, and prove the pre-warm contract on a fresh engine.
+
+Claims gated here (a violated claim exits nonzero):
+
+* every swept config answered the whole trace with triangle counts
+  bit-identical to the default profile (asserted inside the sweep);
+* the tuned profile beats the default by >= 1.15x graphs/sec OR >= 15%
+  p50 on the recorded trace (full run only — a smoke-sized trace is too
+  noisy to gate a throughput ratio on);
+* a pre-warmed server replaying the trace reports ``plan_hit == 1.0``,
+  zero post-warm jit compiles, and bit-identical answers.
+
+Writes ``results/BENCH_autotune.json`` (full) or the untracked
+``results/BENCH_autotune_smoke.json`` (CI smoke), per the smoke-output
+convention; the winning profile lands in ``results/tuned/`` (tracked for
+the full run) and the trace JSONL next to it (untracked — it is a
+measurement input, not an artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MIN_IMPROVEMENT = 1.15  # graphs/sec ratio, tuned vs default
+MIN_P50_REDUCTION = 0.15  # alternative acceptance: p50 latency cut
+
+
+def measure_tune(
+    *,
+    num_requests: int = 96,
+    smoke: bool = False,
+    seed: int = 0,
+    batch_size: int = 8,
+    heavy_every: int = 4,
+    out: Optional[str] = None,
+) -> dict:
+    from repro.tune import (
+        build_profile,
+        default_space,
+        load_profile,
+        prewarm_replay,
+        record_serve_trace,
+        successive_halving,
+        trace_signature,
+    )
+
+    tag = "_smoke" if smoke else ""
+    tuned_dir = os.path.join(_ROOT, "results", "tuned")
+    trace_path = os.path.join(tuned_dir, f"serve_mix{tag}.jsonl")
+    profile_path = os.path.join(tuned_dir, f"serve_mix{tag}.json")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)  # the recorder appends; one trace per run
+
+    t0 = time.perf_counter()
+    records = record_serve_trace(
+        num_requests, seed=seed, smoke=smoke,
+        batch_size=batch_size, path=trace_path,
+        # the smoke trace stays light (CI wall time); the full trace
+        # interleaves a community-analytics tier — see record_serve_trace
+        heavy_every=0 if smoke else heavy_every,
+    )
+    print(f"tune_trace,{(time.perf_counter() - t0) * 1e6:.0f},"
+          f"requests={len(records)}|sig={trace_signature(records)}")
+
+    space = default_space(smoke=smoke)
+    sweep = successive_halving(space, records, batch_size=batch_size,
+                               repeats=1 if smoke else 3)
+    base, win = sweep["baseline"], sweep["winner"]
+    print(f"tune_baseline,{base['wall_s'] * 1e6 / num_requests:.0f},"
+          f"graphs_per_s={base['graphs_per_s']:.1f}"
+          f"|p50_ms={base['p50_ms']:.2f}|p99_ms={base['p99_ms']:.2f}")
+    print(f"tune_winner,{win['wall_s'] * 1e6 / num_requests:.0f},"
+          f"label={win['label']}"
+          f"|graphs_per_s={win['graphs_per_s']:.1f}"
+          f"|improvement={sweep['improvement_graphs_per_s']:.2f}x"
+          f"|p50_reduction={sweep['p50_reduction']:.2f}"
+          f"|configs={len(space)}")
+
+    profile = build_profile(
+        sweep["winner_config"], records,
+        objective={k: win[k] for k in ("label", "graphs_per_s",
+                                       "p50_ms", "p99_ms")},
+    )
+    profile.save(profile_path)
+
+    # the pre-warm contract is proven on a FRESH engine fed from the
+    # persisted file — the exact path a production restart takes
+    loaded = load_profile(profile_path)
+    if loaded is None:
+        raise SystemExit(f"FAIL: just-saved profile {profile_path} unloadable")
+    pre = prewarm_replay(loaded, records, batch_size=batch_size)
+    prewarm_identical = pre["triangles"] == sweep["triangles"]
+    print(f"tune_prewarm,0,plan_hit={pre['plan_hit']:.2f}"
+          f"|jit_compiles={pre['jit_compiles']}"
+          f"|graphs_per_s={pre['graphs_per_s']:.1f}"
+          f"|identical={prewarm_identical}")
+
+    row = {
+        "num_requests": num_requests,
+        "seed": seed,
+        "smoke": smoke,
+        "batch_size": batch_size,
+        "signature": trace_signature(records),
+        "baseline": base,
+        "winner": win,
+        "improvement_graphs_per_s": sweep["improvement_graphs_per_s"],
+        "p50_reduction": sweep["p50_reduction"],
+        "history": sweep["history"],
+        "bit_identical_all_configs": True,  # a mismatch raised in the sweep
+        "prewarm": {k: pre[k] for k in ("plan_hit", "jit_compiles",
+                                        "graphs_per_s", "p50_ms", "p99_ms")},
+        "prewarm_bit_identical": prewarm_identical,
+        "profile": os.path.relpath(profile_path, _ROOT),
+        "trace": os.path.relpath(trace_path, _ROOT),
+    }
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"tune_json,0,written={os.path.normpath(out)}")
+
+    failures = []
+    if pre["plan_hit"] != 1.0:
+        failures.append(f"prewarm plan_hit={pre['plan_hit']} != 1.0")
+    if pre["jit_compiles"] != 0:
+        failures.append(f"prewarm jit_compiles={pre['jit_compiles']} != 0")
+    if not prewarm_identical:
+        failures.append("prewarm replay changed an answer")
+    improved = (
+        sweep["improvement_graphs_per_s"] >= MIN_IMPROVEMENT
+        or sweep["p50_reduction"] >= MIN_P50_REDUCTION
+    )
+    if not smoke and not improved:
+        failures.append(
+            f"tuned profile improved only "
+            f"{sweep['improvement_graphs_per_s']:.2f}x graphs/sec / "
+            f"{sweep['p50_reduction']:.2f} p50 cut "
+            f"(need >= {MIN_IMPROVEMENT}x or >= {MIN_P50_REDUCTION})"
+        )
+    if failures:
+        raise SystemExit("FAIL: " + "; ".join(failures))
+    return row

@@ -126,6 +126,13 @@ class TCOptions:
     Routing policy
       route:          default dispatch of ``TriangleEngine.count`` —
                       one of :data:`ROUTES`.
+      grid:           :class:`~repro.graph.csr.BudgetGrid` geometry for
+                      the batch route / serving queues (``None`` = the
+                      module default grid; an explicit
+                      ``TriangleEngine(budgets=...)`` outranks it).  The
+                      autotuner sweeps this.  Plan-irrelevant: the
+                      resulting *cell* is already in the plan-cache key,
+                      so ``plan_view()`` resets it.
 
     Serving robustness (``launch.serve_tc`` — DESIGN.md §7)
       deadline_s:     default per-request deadline (relative seconds);
@@ -168,6 +175,7 @@ class TCOptions:
     gather_buffer_limit_bytes: int = 64 << 20
     # -- routing policy -----------------------------------------------
     route: str = "auto"
+    grid: Optional[BudgetGrid] = None
     # -- serving robustness -------------------------------------------
     deadline_s: Optional[float] = None
     admission_tokens: Optional[int] = None
@@ -196,6 +204,11 @@ class TCOptions:
         if self.route not in ROUTES:
             raise ValueError(
                 f"route must be one of {ROUTES}; got {self.route!r}"
+            )
+        if self.grid is not None and not isinstance(self.grid, BudgetGrid):
+            raise TypeError(
+                f"grid must be a BudgetGrid or None; "
+                f"got {type(self.grid).__name__}"
             )
         for name in ("query_chunk", "d_max", "cap_h", "d_pad",
                      "hedge_chunk"):
@@ -390,11 +403,22 @@ class TriangleEngine:
     Args:
       options: default :class:`TCOptions` for every call (per-call
         overrides via the ``options=`` / ``route=`` parameters).
+        ``None`` with a ``profile`` adopts the profile's tuned options.
       budgets: the :class:`BudgetGrid` used by the ``batch`` route and
         by ``auto`` routing (its top cell is the local/distributed
-        boundary).  ``None`` = the module default grid.
+        boundary).  ``None`` resolves ``options.grid``, then the
+        profile's grid, then the module default grid.
       mesh: device mesh for the distributed route; ``None`` lazily
         builds a 1-D mesh over every local device on first use.
+      profile: a :class:`~repro.tune.profile.TunedProfile` (or a path to
+        one) from the autotuner — supplies tuned default options, grid
+        geometry, per-cell option overrides (``options_for``) and the
+        per-cell meta ceilings that make ``serve(prewarm=True)`` cover
+        the whole trace.  A corrupt/unknown profile file degrades to
+        defaults with a warning, never a construction failure.
+      plan_cache_capacity: LRU bound of the engine's bounded-plan cache
+        (``None`` = unbounded; default
+        ``core.sequential.DEFAULT_PLAN_CACHE_CAPACITY``).
     """
 
     def __init__(
@@ -403,17 +427,47 @@ class TriangleEngine:
         *,
         budgets: Optional[BudgetGrid] = None,
         mesh=None,
+        profile=None,
+        plan_cache_capacity: Optional[int] = (
+            _seq.DEFAULT_PLAN_CACHE_CAPACITY
+        ),
     ):
         if options is not None and not isinstance(options, TCOptions):
             raise TypeError(
                 f"options must be a TCOptions, got {type(options).__name__}"
             )
+        self.profile = self._resolve_profile(profile)
+        if options is None and self.profile is not None:
+            options = self.profile.options
         self.options = options or TCOptions()
-        self.budgets = budgets or DEFAULT_BUDGET_GRID
+        self.budgets = (
+            budgets
+            or self.options.grid
+            or (self.profile.grid if self.profile is not None else None)
+            or DEFAULT_BUDGET_GRID
+        )
         self._mesh = mesh
-        self._plan_cache: dict = {}
+        self._plan_cache = _seq.PlanCache(plan_cache_capacity)
         self._plan_stats = {"hits": 0, "misses": 0}
         self._meta_ceiling: dict = {}  # ShapeBudget -> BatchDegreeMeta
+        if self.profile is not None:
+            # seed the pooled-meta high-water marks with the profile's
+            # per-cell ceilings: every flush the trace covered collides
+            # onto the ceiling's plan key from request one (the quantizers
+            # commute with max — csr.degree_meta), prewarmed or not
+            for cell in self.profile.cells:
+                if cell.meta is not None:
+                    self.pool_meta(cell.budget, cell.meta)
+
+    @staticmethod
+    def _resolve_profile(profile):
+        if profile is None:
+            return None
+        from repro.tune.profile import TunedProfile, load_profile
+
+        if isinstance(profile, TunedProfile):
+            return profile
+        return load_profile(profile)  # None + warning when unusable
 
     # ------------------------------------------------------------ mesh
     @property
@@ -444,11 +498,24 @@ class TriangleEngine:
         return "local" if fits else "distributed"
 
     # -------------------------------------------------------- planning
+    def options_for(self, budget) -> TCOptions:
+        """Per-cell option resolution: a tuned profile's cell override
+        when one covers ``budget``, this engine's default options
+        otherwise.  Explicit constructor ``options`` outrank the
+        profile's workload-wide default, but not its per-cell
+        overrides — the overrides are what the sweep proved out."""
+        if self.profile is not None:
+            cell = self.profile.cell_for(budget)
+            if cell is not None and cell.options is not None:
+                return cell.options
+        return self.options
+
     def plan_for(self, gb: GraphBatch) -> IntersectPlan:
         """The engine-owned bounded-plan cache, keyed on
-        ``(budget, meta, options.plan_view())``."""
+        ``(budget, meta, options.plan_view())`` — the options resolved
+        per cell (``options_for``)."""
         return _seq.batch_plan_for(
-            gb, options=self.options,
+            gb, options=self.options_for(gb.budget),
             cache=self._plan_cache, stats=self._plan_stats,
         )
 
@@ -474,8 +541,14 @@ class TriangleEngine:
         return pooled
 
     def plan_cache_stats(self, reset: bool = False) -> dict:
-        """``{"hits", "misses", "size"}`` of this engine's plan cache."""
-        out = dict(self._plan_stats, size=len(self._plan_cache))
+        """``{"hits", "misses", "size", "evictions", "capacity"}`` of
+        this engine's (LRU-bounded) plan cache."""
+        out = dict(
+            self._plan_stats,
+            size=len(self._plan_cache),
+            evictions=self._plan_cache.evictions,
+            capacity=self._plan_cache.capacity,
+        )
         if reset:
             self._plan_stats.update(hits=0, misses=0)
         return out
@@ -766,19 +839,25 @@ class TriangleEngine:
                              max_triangles=max_triangles, options=options)
 
     def serve(self, *, batch_size: int = 8, max_inflight: int = 8,
-              strict: bool = False, faults=None):
+              strict: bool = False, faults=None, prewarm: bool = False,
+              recorder=None):
         """A :class:`~repro.launch.serve_tc.TriangleServer` wired to
         THIS engine: its budget grid buckets the queues, its plan cache
         feeds every flush, its mesh answers over-budget requests, and
         its options govern every lane (incl. the deadline / admission /
         degradation knobs — DESIGN.md §7).  ``strict=True`` restores
         raise-on-malformed ``submit``; ``faults`` injects a
-        :class:`~repro.launch.robust.FaultPlan` (chaos testing)."""
+        :class:`~repro.launch.robust.FaultPlan` (chaos testing);
+        ``prewarm=True`` compiles the tuned profile's grid and fills the
+        plan cache before the first request (DESIGN.md §11);
+        ``recorder`` attaches a :class:`~repro.tune.trace.TraceRecorder`
+        that captures the workload for offline autotuning."""
         from repro.launch.serve_tc import TriangleServer
 
         return TriangleServer(engine=self, batch_size=batch_size,
                               max_inflight=max_inflight, strict=strict,
-                              faults=faults)
+                              faults=faults, prewarm=prewarm,
+                              recorder=recorder)
 
     # -------------------------------------------------- report builders
     def _report_local(

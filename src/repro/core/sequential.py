@@ -205,7 +205,58 @@ def _exact_batch_plan(
 
 # ----------------------------------------------------- batch plan cache
 
-_BATCH_PLAN_CACHE: dict = {}
+#: default bound on a plan cache — far above any sane serving compile
+#: grid (budgets x widths x chunking), low enough that an autotuner
+#: sweeping thousands of (meta, plan_view) combinations through one
+#: engine cannot grow the host dict without bound
+DEFAULT_PLAN_CACHE_CAPACITY = 256
+
+
+class PlanCache:
+    """Bounded LRU mapping for bounded ``IntersectPlan``s.
+
+    Drop-in for the plain dict ``batch_plan_for`` historically used
+    (``get`` + ``__setitem__`` + ``len``), plus recency tracking and a
+    capacity: inserting past ``capacity`` evicts the least-recently-used
+    plan (``evictions`` counts them).  Eviction is only a performance
+    event, never a correctness one — a re-planned key produces an equal
+    plan (planning is a pure function of the key) and at worst one extra
+    jit trace.  ``capacity=None`` restores the unbounded behavior.
+    """
+
+    def __init__(self, capacity: int | None = DEFAULT_PLAN_CACHE_CAPACITY):
+        if capacity is not None and int(capacity) <= 0:
+            raise ValueError(f"capacity must be positive; got {capacity}")
+        self.capacity = int(capacity) if capacity is not None else None
+        self.evictions = 0
+        self._d: dict = {}  # insertion-ordered; re-insert marks recency
+
+    def get(self, key):
+        plan = self._d.get(key)
+        if plan is not None:  # touch: move to the recent end
+            del self._d[key]
+            self._d[key] = plan
+        return plan
+
+    def __setitem__(self, key, plan) -> None:
+        self._d.pop(key, None)
+        self._d[key] = plan
+        while self.capacity is not None and len(self._d) > self.capacity:
+            self._d.pop(next(iter(self._d)))
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.evictions = 0
+
+
+_BATCH_PLAN_CACHE = PlanCache()
 _BATCH_PLAN_STATS = {"hits": 0, "misses": 0}
 
 
@@ -218,7 +269,7 @@ def batch_plan_for(
     interpret: bool | None = None,
     query_chunk: int | None = None,
     row_mult: int = 64,
-    cache: dict | None = None,
+    cache: "dict | PlanCache | None" = None,
     stats: dict | None = None,
 ) -> IntersectPlan:
     """Sync-free bounded plan for a packed batch, memoized host-side.
@@ -276,8 +327,15 @@ def batch_plan_for(
 
 
 def batch_plan_cache_stats(reset: bool = False) -> dict:
-    """``{"hits", "misses", "size"}`` of the bounded-plan cache."""
-    out = dict(_BATCH_PLAN_STATS, size=len(_BATCH_PLAN_CACHE))
+    """``{"hits", "misses", "size", "evictions", "capacity"}`` of the
+    module-global bounded-plan cache (engine-owned caches report via
+    ``TriangleEngine.plan_cache_stats``)."""
+    out = dict(
+        _BATCH_PLAN_STATS,
+        size=len(_BATCH_PLAN_CACHE),
+        evictions=_BATCH_PLAN_CACHE.evictions,
+        capacity=_BATCH_PLAN_CACHE.capacity,
+    )
     if reset:
         _BATCH_PLAN_STATS.update(hits=0, misses=0)
     return out

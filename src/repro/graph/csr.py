@@ -163,11 +163,20 @@ class ShapeBudget:
     slot_budget: int
 
 
+@dataclasses.dataclass(frozen=True)
 class BudgetGrid:
     """Rounds arbitrary request sizes onto a fixed geometric grid of
     ``ShapeBudget``s so the number of distinct compiled programs (and
     plan-cache entries) stays logarithmic in the largest request, not
     linear in the number of distinct request shapes.
+
+    The geometry — base cell ``(min_nodes, min_slots)``, geometric
+    ``factor``, top-cell extent ``(max_nodes, max_slots)`` — is a frozen,
+    hashable, validated value: the autotuner (``repro.tune``) sweeps it
+    like any other plan knob, and a tuned grid round-trips through a
+    ``TunedProfile`` unchanged.  Coarser geometry trades padding waste
+    for fewer distinct cells (queues fill faster, fewer compiled
+    programs); the default is the finest PR-3 grid.
 
     ``max_nodes``/``max_slots`` cap the grid at a top cell: requests
     whose rounded cell would exceed either cap do not ``fit`` and make
@@ -177,16 +186,34 @@ class BudgetGrid:
     leaves the grid unbounded, the pre-PR-4 behavior.
     """
 
-    def __init__(self, *, min_nodes: int = 64, min_slots: int = 256,
-                 factor: float = 2.0, max_nodes: int | None = None,
-                 max_slots: int | None = None):
-        if factor <= 1.0:
-            raise ValueError("factor must be > 1")
-        self.min_nodes = int(min_nodes)
-        self.min_slots = int(min_slots)
-        self.factor = float(factor)
-        self.max_nodes = int(max_nodes) if max_nodes is not None else None
-        self.max_slots = int(max_slots) if max_slots is not None else None
+    min_nodes: int = 64
+    min_slots: int = 256
+    factor: float = 2.0
+    max_nodes: Optional[int] = None
+    max_slots: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "min_nodes", int(self.min_nodes))
+        object.__setattr__(self, "min_slots", int(self.min_slots))
+        object.__setattr__(self, "factor", float(self.factor))
+        for name in ("max_nodes", "max_slots"):
+            v = getattr(self, name)
+            object.__setattr__(self, name, int(v) if v is not None else None)
+        if self.min_nodes <= 0 or self.min_slots <= 0:
+            raise ValueError(
+                f"grid base cell must be positive; got min_nodes="
+                f"{self.min_nodes}, min_slots={self.min_slots}"
+            )
+        if not self.factor > 1.0:
+            raise ValueError(f"factor must be > 1; got {self.factor}")
+        if self.max_nodes is not None and self.max_nodes < self.min_nodes:
+            raise ValueError(
+                f"max_nodes={self.max_nodes} < min_nodes={self.min_nodes}"
+            )
+        if self.max_slots is not None and self.max_slots < self.min_slots:
+            raise ValueError(
+                f"max_slots={self.max_slots} < min_slots={self.min_slots}"
+            )
 
     def _round(self, x: int, lo: int) -> int:
         if x <= lo:
@@ -261,6 +288,41 @@ class BatchDegreeMeta:
                 for (w, c), (_, oc) in zip(self.exceed, other.exceed)
             ),
         )
+
+
+def degree_meta(edges: np.ndarray, n_nodes: int) -> BatchDegreeMeta:
+    """Quantized ``BatchDegreeMeta`` of ONE request — the same host-side
+    statistics ``from_edges_batch`` pools over a batch's lanes, computed
+    for a single ``(edges, n_nodes)`` pair.
+
+    The quantizers (pow2 ``d_pad``, ``META_ROW_QUANT`` rows) commute
+    with elementwise max, so the ``BatchDegreeMeta.union`` of per-request
+    metas upper-bounds the meta of ANY batch packed from those requests
+    — which is exactly what the trace recorder (``repro.tune.trace``)
+    relies on: a profile's per-cell meta ceiling, unioned from the
+    trace's request metas, makes every serving flush of covered traffic
+    collide onto the pre-warmed plan-cache key.
+    """
+    s, d = _normalize_edges(edges, n_nodes)
+    m2 = s.shape[0]
+    d_max, h_count = 0, 0
+    exceed = {w: 0 for w in META_WIDTHS}
+    if m2:
+        counts = np.bincount(s, minlength=n_nodes + 1)[: max(n_nodes, 1)]
+        d_max = int(counts.max())
+        h_count = m2 // 2
+        und = s < d
+        mind = np.minimum(counts[s[und]], counts[d[und]])
+        for w in META_WIDTHS:
+            exceed[w] = int((mind > w).sum())
+    return BatchDegreeMeta(
+        d_pad=_next_pow2(max(d_max, 1)),
+        h_rows=_ceil_to(max(h_count, 1), META_ROW_QUANT),
+        exceed=tuple(
+            (w, _ceil_to(c, META_ROW_QUANT) if c else 0)
+            for w, c in sorted(exceed.items())
+        ),
+    )
 
 
 @jax.tree_util.register_dataclass

@@ -222,6 +222,8 @@ class TriangleServer:
         max_inflight: int = 8,
         strict: bool = False,
         faults=None,
+        prewarm: bool = False,
+        recorder=None,
         intersect_backend: str = "auto",
         bucket_widths: Sequence[int] = DEFAULT_BUCKET_WIDTHS,
         grid: Optional[BudgetGrid] = None,
@@ -283,6 +285,53 @@ class TriangleServer:
         #: cannot be cancelled); this counts the leak we chose over
         #: blocking the serving loop
         self.abandoned_distributed = 0
+        # -- autotuning hooks (DESIGN.md §11) --------------------------
+        #: optional ``repro.tune.trace.TraceRecorder`` capturing every
+        #: well-formed request (shape signature + replayable payload)
+        self.recorder = recorder
+        if prewarm:
+            self.prewarm()
+        # summary()'s plan_hit / jit_compiles are measured from AFTER
+        # construction (and pre-warm): the warm-up's own misses and
+        # compiles are the point of pre-warming, not serving cost
+        _ps = self.engine.plan_cache_stats()
+        self._plan_baseline = (_ps["hits"], _ps["misses"])
+        self._jit_baseline = _jit_cache_size()
+
+    def prewarm(self) -> None:
+        """Compile the serving grid and fill the plan cache BEFORE the
+        first request, from the engine's tuned profile (DESIGN.md §11).
+
+        For every profile cell that carries a meta ceiling: pool the
+        ceiling into the engine's high-water mark, plan at the ceiling,
+        and run one empty batch per power-of-two lane count of the drain
+        ladder — exactly the ``(budget, lanes, plan)`` jit keys serving
+        flushes will use.  Because the meta quantizers commute with
+        ``max``, every flush of trace-covered traffic then lands on a
+        cached plan and a compiled program: the first real request never
+        pays a compile stall.  A profile-less engine pre-warms nothing
+        (there is no trace to predict the traffic with).
+        """
+        profile = getattr(self.engine, "profile", None)
+        if profile is None:
+            return
+        lanes_ladder, lanes = [], 1
+        while lanes < self.batch_size:
+            lanes_ladder.append(lanes)
+            lanes <<= 1
+        lanes_ladder.append(self.batch_size)
+        for cell in profile.cells:
+            if cell.meta is None:
+                continue  # no ceiling — nothing to key the warm plan on
+            pooled = self.engine.pool_meta(cell.budget, cell.meta)
+            for lanes in lanes_ladder:
+                gb = from_edges_batch(
+                    [], budget=cell.budget, batch_size=lanes
+                )
+                gb = dataclasses.replace(gb, meta=pooled)
+                plan = self.engine.plan_for(gb)
+                res = self.engine.count_batch_raw(gb, plan=plan)
+                jax.block_until_ready(res.triangles)
 
     @property
     def grid(self) -> BudgetGrid:
@@ -343,9 +392,11 @@ class TriangleServer:
         # have its over-budget requests answered, not crash on budget_for
         route = self.engine.route_for(n_nodes, edges.shape[0], route="auto")
         if route == "distributed":
+            self._record_trace(rid, edges, n_nodes, "distributed", None, rel)
             self._serve_distributed(rid, edges, n_nodes, t_submit)
             return rid
         budget = self.grid.budget_for(n_nodes, edges.shape[0])
+        self._record_trace(rid, edges, n_nodes, "batch", budget, rel)
         if (o.admission_tokens is not None
                 and self._tokens[budget] >= o.admission_tokens):
             # cell full: the ladder's degrade rung (shed if disabled)
@@ -360,6 +411,23 @@ class TriangleServer:
         if len(q) >= self.batch_size:
             self._flush(budget, cause="size")
         return rid
+
+    def _record_trace(self, rid, edges, n_nodes, route, budget, rel) -> None:
+        """Feed one validated, routed request to the attached trace
+        recorder.  Recording is observability, not serving: a recorder
+        failure is warned about, never raised into ``submit``'s
+        never-raise contract."""
+        if self.recorder is None:
+            return
+        try:
+            self.recorder.record(
+                request_id=rid, edges=edges, n_nodes=n_nodes,
+                route=route, budget=budget, deadline_s=rel,
+            )
+        except Exception as exc:  # noqa: BLE001 — tracing must not kill serving
+            import warnings
+
+            warnings.warn(f"trace recorder failed on request {rid}: {exc}")
 
     # -------------------------------------------- degradation ladder
     def _reject(self, rid: int, reason: str, detail: str,
@@ -660,7 +728,20 @@ class TriangleServer:
         by_route: dict[str, int] = defaultdict(int)
         for r in self.results:  # every answer, "rejected" included
             by_route[r.route] += 1
+        # plan_hit / jit_compiles since THIS server came up (post
+        # pre-warm): 1.0 / 0 is the pre-warm contract on covered traffic
+        ps = self.engine.plan_cache_stats()
+        hits = ps["hits"] - self._plan_baseline[0]
+        misses = ps["misses"] - self._plan_baseline[1]
+        looked = hits + misses
+        jit_now = _jit_cache_size()
+        jit_compiles = (
+            max(0, jit_now - self._jit_baseline)
+            if jit_now >= 0 and self._jit_baseline >= 0 else None
+        )
         return {
+            "plan_hit": 1.0 if looked <= 0 else hits / looked,
+            "jit_compiles": jit_compiles,
             "requests": len(self.results),
             "completed": len(completed),
             "rejected": self.rejected_requests,

@@ -1,0 +1,68 @@
+"""repro.tune — trace-driven autotuning of the triangle-counting plan
+space (DESIGN.md §11).
+
+Three layers, each usable alone:
+
+* :mod:`repro.tune.trace` — record a serving workload (per-request shape
+  signature: budget cell, quantized ``BatchDegreeMeta``, route, plus the
+  replayable edge payload) to JSONL, read it back, and reduce it to a
+  workload-shape *signature* string.
+* :mod:`repro.tune.profile` — versioned :class:`TunedProfile` files:
+  the sweep's winning ``TCOptions`` + ``BudgetGrid`` geometry + per-cell
+  pre-warm metadata, keyed by trace signature, persisted under
+  ``results/tuned/``.  ``TriangleEngine(profile=...)`` consumes them;
+  corrupt or unknown files degrade to defaults with a warning, never a
+  crash at server start.
+* :mod:`repro.tune.sweep` — the offline sweep engine: replay a trace
+  through the real serving path for every candidate config
+  (bucket-width ladders, ``query_chunk``/``row_mult``, backend, hedge
+  mode, grid geometry) under successive-halving pruning, asserting
+  bit-identical triangle counts against the default profile on every
+  evaluated config, and build the winner's profile.
+
+The package imports jax only transitively through :mod:`repro.api`; a
+bare ``import repro`` stays jax-free.
+"""
+from repro.tune.profile import (  # noqa: F401
+    PROFILE_VERSION,
+    CellProfile,
+    TunedProfile,
+    load_profile,
+)
+from repro.tune.sweep import (  # noqa: F401
+    SweepConfig,
+    build_profile,
+    default_space,
+    evaluate_config,
+    prewarm_replay,
+    successive_halving,
+)
+from repro.tune.trace import (  # noqa: F401
+    TRACE_VERSION,
+    TraceRecord,
+    TraceRecorder,
+    read_trace,
+    record_serve_trace,
+    trace_signature,
+    write_trace,
+)
+
+__all__ = [
+    "PROFILE_VERSION",
+    "TRACE_VERSION",
+    "CellProfile",
+    "SweepConfig",
+    "TraceRecord",
+    "TraceRecorder",
+    "TunedProfile",
+    "build_profile",
+    "default_space",
+    "evaluate_config",
+    "load_profile",
+    "prewarm_replay",
+    "read_trace",
+    "record_serve_trace",
+    "successive_halving",
+    "trace_signature",
+    "write_trace",
+]

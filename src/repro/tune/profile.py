@@ -1,0 +1,185 @@
+"""Versioned tuned profiles: the persistent output of a sweep.
+
+A :class:`TunedProfile` is small, tracked JSON under ``results/tuned/``:
+the workload-shape signature it was tuned for, the winning workload-wide
+``TCOptions``, the winning ``BudgetGrid`` geometry, and one
+:class:`CellProfile` per budget cell the trace exercised.  Each cell
+carries the per-cell option override plus the cell's **meta ceiling** —
+the elementwise union of the per-request ``BatchDegreeMeta``\\ s the
+trace routed into that cell.  Because the meta quantizers commute with
+``max`` (see :func:`repro.graph.csr.degree_meta`), seeding the engine's
+pooled-meta high-water mark with that ceiling makes every covered flush
+collide onto the pre-warmed plan key: that is the whole pre-warm
+contract.
+
+Loading is deliberately forgiving: a corrupt, truncated, or
+newer-versioned profile file must never crash a server at start, so
+:func:`load_profile` returns ``None`` with a warning and the engine
+serves with defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import warnings
+from typing import Dict, Optional, Tuple
+
+from repro.api import TCOptions
+from repro.graph.csr import BatchDegreeMeta, BudgetGrid, ShapeBudget
+from repro.tune.trace import _meta_from_json, _meta_to_json
+
+PROFILE_VERSION = 1
+
+#: Default directory for persisted profiles (tracked in git, unlike traces).
+PROFILE_DIR = os.path.join("results", "tuned")
+
+_OPTION_FIELDS = {f.name for f in dataclasses.fields(TCOptions)}
+_TUPLE_OPTION_FIELDS = ("bucket_widths",)
+
+
+def _options_to_json(options: TCOptions) -> dict:
+    d = dataclasses.asdict(options)
+    # Grid geometry is persisted once at the profile's top level; a grid
+    # nested inside options would shadow it ambiguously.
+    d.pop("grid", None)
+    return d
+
+
+def _options_from_json(d: dict) -> TCOptions:
+    unknown = set(d) - _OPTION_FIELDS
+    if unknown:
+        raise ValueError(f"unknown TCOptions fields {sorted(unknown)}")
+    kw = dict(d)
+    for name in _TUPLE_OPTION_FIELDS:
+        if kw.get(name) is not None:
+            kw[name] = tuple(kw[name])
+    return TCOptions(**kw)
+
+
+def _grid_to_json(grid: BudgetGrid) -> dict:
+    return dataclasses.asdict(grid)
+
+
+def _grid_from_json(d: dict) -> BudgetGrid:
+    known = {f.name for f in dataclasses.fields(BudgetGrid)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"unknown BudgetGrid fields {sorted(unknown)}")
+    return BudgetGrid(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellProfile:
+    """Tuned state for one budget cell: option override + meta ceiling."""
+
+    budget: ShapeBudget
+    options: Optional[TCOptions] = None  # None: inherit the profile default
+    meta: Optional[BatchDegreeMeta] = None
+
+    def to_json(self) -> dict:
+        return {
+            "budget": [self.budget.n_budget, self.budget.slot_budget],
+            "options": _options_to_json(self.options) if self.options else None,
+            "meta": _meta_to_json(self.meta) if self.meta else None,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CellProfile":
+        b = d["budget"]
+        opts = d.get("options")
+        meta = d.get("meta")
+        return cls(
+            budget=ShapeBudget(int(b[0]), int(b[1])),
+            options=_options_from_json(opts) if opts else None,
+            meta=_meta_from_json(meta) if meta else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TunedProfile:
+    """A sweep winner, keyed by workload-shape signature."""
+
+    signature: str
+    options: TCOptions
+    grid: BudgetGrid
+    cells: Tuple[CellProfile, ...] = ()
+    objective: Optional[dict] = None  # free-form sweep outcome (graphs/s, p50, ...)
+    version: int = PROFILE_VERSION
+
+    def cell_for(self, budget: ShapeBudget) -> Optional[CellProfile]:
+        for cell in self.cells:
+            if cell.budget == budget:
+                return cell
+        return None
+
+    def options_for(self, budget: ShapeBudget) -> TCOptions:
+        cell = self.cell_for(budget)
+        if cell is not None and cell.options is not None:
+            return cell.options
+        return self.options
+
+    def meta_for(self, budget: ShapeBudget) -> Optional[BatchDegreeMeta]:
+        cell = self.cell_for(budget)
+        return cell.meta if cell is not None else None
+
+    def to_json(self) -> dict:
+        return {
+            "version": self.version,
+            "signature": self.signature,
+            "options": _options_to_json(self.options),
+            "grid": _grid_to_json(self.grid),
+            "cells": [c.to_json() for c in self.cells],
+            "objective": self.objective,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunedProfile":
+        version = int(d["version"])
+        if version > PROFILE_VERSION:
+            raise ValueError(
+                f"profile version {version} > supported {PROFILE_VERSION}"
+            )
+        return cls(
+            signature=str(d["signature"]),
+            options=_options_from_json(d["options"]),
+            grid=_grid_from_json(d["grid"]),
+            cells=tuple(CellProfile.from_json(c) for c in d.get("cells", [])),
+            objective=d.get("objective"),
+            version=version,
+        )
+
+    def save(self, path: str) -> str:
+        path = os.fspath(path)
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        return path
+
+
+def load_profile(path: str) -> Optional[TunedProfile]:
+    """Load a profile, degrading to ``None`` (defaults) with a warning on
+    any problem — a bad profile file must never take a server down."""
+    path = os.fspath(path)
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+        return TunedProfile.from_json(data)
+    except Exception as exc:  # noqa: BLE001 - degrade, never crash at start
+        warnings.warn(
+            f"ignoring unusable tuned profile {path!r} ({exc}); "
+            "serving with default options",
+            stacklevel=2,
+        )
+        return None
+
+
+def profile_path(signature_or_name: str, directory: str = PROFILE_DIR) -> str:
+    """Filesystem path for a profile: signatures are slugged to a name."""
+    slug = "".join(
+        ch if ch.isalnum() or ch in "-_." else "_" for ch in signature_or_name
+    )
+    return os.path.join(directory, f"{slug}.json")

@@ -1,0 +1,332 @@
+"""The offline sweep engine: replay a recorded workload through the
+real serving path under candidate configs, prune with successive
+halving, and emit the winner as a :class:`TunedProfile`.
+
+Honesty rules (the same ones ``launch.serve_tc.measure_serve`` lives
+by):
+
+* every candidate is measured through a real ``engine.serve()`` server —
+  the same batching, pooling, plan-cache and fused-jit path production
+  runs, not a microbenchmark of the intersection kernel;
+* every candidate gets a warm replay before its timed replay, so
+  compiles and plan builds are excluded from the measurement;
+* every evaluated config's per-request triangle counts are asserted
+  **bit-identical** to the default profile's, by request id — a config
+  that changes any answer aborts the sweep (:class:`SweepMismatch`).
+  Plans are exactness-preserving by construction; this assertion is the
+  belt to that suspenders.
+
+Successive halving keeps the search tractable: rung ``i`` replays a
+prefix of the trace, ranks the surviving configs by graphs/sec, and
+keeps the top half; the final rung replays the full trace, so the
+reported winner numbers are never extrapolated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional, Sequence
+
+from repro.graph.csr import DEFAULT_BUDGET_GRID, BudgetGrid
+from repro.tune.profile import CellProfile, TunedProfile
+from repro.tune.trace import TraceRecord, trace_signature
+
+
+class SweepMismatch(AssertionError):
+    """A swept config changed an answer — the sweep must not persist it."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """One point of the search space: a label, the ``TCOptions`` to
+    serve with, and the ``BudgetGrid`` geometry to bucket with."""
+
+    label: str
+    options: "object"  # TCOptions (kept untyped: module stays import-light)
+    grid: BudgetGrid = DEFAULT_BUDGET_GRID
+
+
+def default_space(*, smoke: bool = False) -> List[SweepConfig]:
+    """The candidate grid over the ``plan_view()`` space: bucket-width
+    ladders (subsets of ``META_WIDTHS`` — the quantized meta carries
+    bounds only for those widths), ``row_mult``/``query_chunk``,
+    backend, hedge mode, and ``BudgetGrid`` geometry.  ``configs[0]`` is
+    always the default profile (the baseline every other config is
+    bit-checked against)."""
+    from repro.api import TCOptions
+
+    base = TCOptions()
+    coarse = BudgetGrid(min_nodes=128, min_slots=1024, factor=4.0)
+    coarser = BudgetGrid(min_nodes=128, min_slots=2048, factor=8.0)
+    space = [
+        SweepConfig("default", base),
+        SweepConfig("grid:128x1024xf4", base, coarse),
+        SweepConfig("widths:8-64", dataclasses.replace(
+            base, bucket_widths=(8, 64))),
+        SweepConfig("row_mult:16", dataclasses.replace(base, row_mult=16)),
+        SweepConfig(
+            "grid:128x1024xf4+widths:8-64",
+            dataclasses.replace(base, bucket_widths=(8, 64)),
+            coarse,
+        ),
+    ]
+    if smoke:
+        return space
+    space += [
+        SweepConfig("grid:128x2048xf8", base, coarser),
+        SweepConfig("widths:64", dataclasses.replace(
+            base, bucket_widths=(64,))),
+        SweepConfig("widths:8-32-64-256", dataclasses.replace(
+            base, bucket_widths=(8, 32, 64, 256))),
+        SweepConfig("row_mult:128", dataclasses.replace(base, row_mult=128)),
+        SweepConfig("query_chunk:256", dataclasses.replace(
+            base, query_chunk=256)),
+        SweepConfig("backend:jnp", dataclasses.replace(base, backend="jnp")),
+        SweepConfig("hedge:ring", dataclasses.replace(base, mode="ring")),
+        SweepConfig(
+            "grid:128x2048xf8+widths:8-64",
+            dataclasses.replace(base, bucket_widths=(8, 64)),
+            coarser,
+        ),
+        SweepConfig(
+            "grid:128x1024xf4+row_mult:16",
+            dataclasses.replace(base, row_mult=16),
+            coarse,
+        ),
+    ]
+    return space
+
+
+def _replay(engine, records: Sequence[TraceRecord], batch_size: int):
+    server = engine.serve(batch_size=batch_size)
+    t0 = time.perf_counter()
+    for rec in records:
+        edges, n = rec.request()
+        server.submit(edges, n, deadline_s=rec.deadline_s)
+    server.drain()
+    return server, time.perf_counter() - t0
+
+
+def evaluate_config(
+    config: SweepConfig,
+    records: Sequence[TraceRecord],
+    *,
+    batch_size: int = 8,
+    repeats: int = 1,
+) -> dict:
+    """Measure one config on one trace through the real serving path:
+    fresh engine, warm replay (compiles + plans excluded), then
+    ``repeats`` timed replays keeping the fastest (per-request wall is
+    sub-millisecond here, so best-of-N is what separates a real plan
+    win from scheduler noise).  Returns the objective row plus the
+    per-request triangle counts (by submit order) the bit-identity
+    assertion consumes."""
+    from repro.api import TriangleEngine
+    from repro.launch.serve_tc import TriangleAnalytics, _pct_ms
+
+    engine = TriangleEngine(config.options, budgets=config.grid)
+    _replay(engine, records, batch_size)  # warm
+    server, wall = _replay(engine, records, batch_size)
+    for _ in range(max(1, int(repeats)) - 1):
+        s2, w2 = _replay(engine, records, batch_size)
+        if w2 < wall:
+            server, wall = s2, w2
+    by_id = {r.request_id: r for r in server.results}
+    triangles, overflow = [], False
+    for i in range(len(records)):
+        r = by_id.get(i)
+        if not isinstance(r, TriangleAnalytics) or r.route == "approx":
+            raise SweepMismatch(
+                f"config {config.label!r}: request {i} was not answered "
+                f"exactly ({type(r).__name__ if r else 'missing'}) — "
+                "sweep configs must serve the whole trace exactly"
+            )
+        triangles.append(int(r.triangles))
+        overflow = overflow or bool(r.overflow)
+    lat = sorted(
+        r.latency_s for r in server.results
+        if isinstance(r, TriangleAnalytics)
+    )
+    stats = server.summary()
+    return {
+        "label": config.label,
+        "requests": len(records),
+        "graphs_per_s": len(records) / wall if wall > 0 else float("inf"),
+        "wall_s": wall,
+        "p50_ms": _pct_ms(lat, 50),
+        "p99_ms": _pct_ms(lat, 99),
+        "batches": stats["batches"],
+        "plan_hit": stats["plan_hit"],
+        "overflow": overflow,
+        "triangles": triangles,
+    }
+
+
+def _check_identical(result: dict, baseline: dict, label: str) -> None:
+    n = len(result["triangles"])
+    ref = baseline["triangles"][:n]
+    if result["overflow"]:
+        raise SweepMismatch(f"config {label!r} overflowed a bounded plan")
+    if result["triangles"] != ref:
+        bad = next(
+            i for i, (a, b) in enumerate(zip(result["triangles"], ref))
+            if a != b
+        )
+        raise SweepMismatch(
+            f"config {label!r} changed request {bad}: "
+            f"{result['triangles'][bad]} != {ref[bad]}"
+        )
+
+
+def successive_halving(
+    space: Sequence[SweepConfig],
+    records: Sequence[TraceRecord],
+    *,
+    batch_size: int = 8,
+    rungs: Sequence[float] = (0.25, 0.5, 1.0),
+    keep: float = 0.5,
+    repeats: int = 1,
+    log=None,
+) -> dict:
+    """Sweep ``space`` over ``records`` with successive-halving pruning.
+
+    The baseline (``space[0]``, the default config) is evaluated once on
+    the FULL trace; every other evaluation — at every rung — is asserted
+    bit-identical to it on the replayed prefix.  Returns the baseline
+    row, the per-rung history, and the winner's full-trace row.
+    """
+    if not records:
+        raise ValueError("cannot sweep an empty trace")
+    if not space:
+        raise ValueError("cannot sweep an empty config space")
+    say = log or (lambda *_: None)
+    baseline_cfg = space[0]
+    baseline = evaluate_config(baseline_cfg, records,
+                               batch_size=batch_size, repeats=repeats)
+    say(f"baseline {baseline_cfg.label}: "
+        f"{baseline['graphs_per_s']:.1f} graphs/s")
+    alive = list(space)
+    results = {baseline_cfg.label: baseline}
+    history = []
+    fracs = list(rungs)
+    if not fracs or fracs[-1] < 1.0:
+        fracs.append(1.0)  # winner numbers must come from the full trace
+    for rung, frac in enumerate(fracs):
+        n = max(1, min(len(records), math.ceil(len(records) * frac)))
+        sub = records[:n]
+        rows = []
+        for cfg in alive:
+            if frac >= 1.0 and cfg.label == baseline_cfg.label:
+                row = baseline  # already measured on the full trace
+            else:
+                row = evaluate_config(cfg, sub, batch_size=batch_size,
+                                      repeats=repeats)
+                _check_identical(row, baseline, cfg.label)
+            rows.append((cfg, row))
+            results[cfg.label] = row
+            say(f"rung {rung} ({n} reqs) {cfg.label}: "
+                f"{row['graphs_per_s']:.1f} graphs/s")
+        rows.sort(key=lambda cr: -cr[1]["graphs_per_s"])
+        history.append({
+            "rung": rung,
+            "fraction": frac,
+            "requests": n,
+            "evals": [
+                {k: r[k] for k in ("label", "graphs_per_s", "p50_ms",
+                                   "p99_ms", "batches", "plan_hit")}
+                for _, r in rows
+            ],
+        })
+        if frac >= 1.0:
+            alive = [rows[0][0]]
+            break
+        alive = [cfg for cfg, _ in rows[: max(1, math.ceil(len(rows) * keep))]]
+    winner_cfg = alive[0]
+    winner = results[winner_cfg.label]
+    return {
+        "baseline": {k: v for k, v in baseline.items() if k != "triangles"},
+        "winner": {k: v for k, v in winner.items() if k != "triangles"},
+        # the ground truth every config was checked against — callers
+        # (e.g. the pre-warm replay gate) bit-check against this too
+        "triangles": list(baseline["triangles"]),
+        "winner_config": winner_cfg,
+        "history": history,
+        "improvement_graphs_per_s": (
+            winner["graphs_per_s"] / baseline["graphs_per_s"]
+        ),
+        "p50_reduction": (
+            1.0 - winner["p50_ms"] / baseline["p50_ms"]
+            if baseline["p50_ms"] > 0 else 0.0
+        ),
+    }
+
+
+def build_profile(
+    config: SweepConfig,
+    records: Sequence[TraceRecord],
+    *,
+    objective: Optional[dict] = None,
+) -> TunedProfile:
+    """Freeze a sweep winner into a persistable :class:`TunedProfile`.
+
+    Per-cell meta ceilings are the union of the per-request quantized
+    metas the trace routes into each cell *under the winner's grid* —
+    a true upper bound on every flush meta (the quantizers commute with
+    ``max``), which is exactly what ``serve(prewarm=True)`` needs to
+    cover the whole trace with pre-compiled plans."""
+    cells: dict = {}
+    for rec in records:
+        if rec.meta is None:
+            continue
+        if not config.grid.fits(rec.n_nodes, rec.n_edges):
+            continue  # distributed under this geometry: no batch cell
+        b = config.grid.budget_for(rec.n_nodes, rec.n_edges)
+        cells[b] = rec.meta if b not in cells else cells[b].union(rec.meta)
+    return TunedProfile(
+        signature=trace_signature(records),
+        options=config.options,
+        grid=config.grid,
+        cells=tuple(
+            CellProfile(budget=b, options=config.options, meta=m)
+            for b, m in sorted(cells.items())
+        ),
+        objective=objective,
+    )
+
+
+def prewarm_replay(
+    profile: TunedProfile,
+    records: Sequence[TraceRecord],
+    *,
+    batch_size: int = 8,
+) -> dict:
+    """The pre-warm contract check: serve the trace on a fresh
+    pre-warmed engine and report ``plan_hit`` / post-warm
+    ``jit_compiles`` (expected 1.0 / 0 on trace-covered traffic) plus
+    the per-request triangle counts for the caller's bit-check."""
+    from repro.api import TriangleEngine
+    from repro.launch.serve_tc import TriangleAnalytics
+
+    engine = TriangleEngine(profile=profile)
+    server = engine.serve(batch_size=batch_size, prewarm=True)
+    t0 = time.perf_counter()
+    for rec in records:
+        edges, n = rec.request()
+        server.submit(edges, n, deadline_s=rec.deadline_s)
+    server.drain()
+    wall = time.perf_counter() - t0
+    stats = server.summary()
+    by_id = {r.request_id: r for r in server.results}
+    return {
+        "plan_hit": stats["plan_hit"],
+        "jit_compiles": stats["jit_compiles"],
+        "graphs_per_s": len(records) / wall if wall > 0 else float("inf"),
+        "p50_ms": stats["p50_ms"],
+        "p99_ms": stats["p99_ms"],
+        "triangles": [
+            int(by_id[i].triangles)
+            if isinstance(by_id.get(i), TriangleAnalytics) else None
+            for i in range(len(records))
+        ],
+    }
