@@ -46,6 +46,11 @@ no argument runs everything.
               ``results/BENCH_autotune.json``.  ``tune_smoke`` is the CI
               variant (smaller trace + space; writes the untracked
               ``results/BENCH_autotune_smoke.json``)
+  audit    -> static program audit wall-time gate: the full
+              ``repro.analysis.audit`` run (compile-set, int32 bounds,
+              host-sync, collectives, dead code over every route) plus
+              the baseline diff must finish within 60 s; writes
+              ``results/BENCH_audit.json``
   roofline -> §Roofline terms from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -254,6 +259,23 @@ def bench_roofline():
                     f"|peakGB={r['peak_gb']:.1f}")
 
 
+def bench_audit():
+    from benchmarks.audit_bench import measure
+
+    res = measure()
+    path = os.path.join(_ROOT, "results", "BENCH_audit.json")
+    with open(path, "w") as fh:
+        json.dump(res, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"audit,{res['wall_s'] * 1e6:.0f},findings={res['findings']}"
+          f"|baseline_checked={res['baseline_checked']}"
+          f"|within_budget={res['within_budget']}")
+    assert res["within_budget"], (
+        f"static audit took {res['wall_s']}s > {res['wall_budget_s']}s "
+        f"budget — it must stay cheap enough to gate every PR"
+    )
+
+
 BENCHES = {
     "table1": bench_table1,
     "k_frac": bench_k_fraction,
@@ -268,6 +290,7 @@ BENCHES = {
     "comm_smoke": lambda: bench_comm(smoke=True),
     "tune": bench_tune,
     "tune_smoke": lambda: bench_tune(smoke=True),
+    "audit": bench_audit,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,43 @@
+"""Static program auditing (DESIGN.md §12).
+
+Four passes walk the lowered jaxprs/StableHLO of every engine route
+without executing device code — compile-set enumeration
+(``compile_set``), int32 index-bound propagation (``bounds``),
+host-sync detection (``hostsync``) and collective-completeness
+(``collectives``) — plus the unused-public-symbol sweep
+(``deadcode``).  ``python -m repro.analysis.audit`` runs them all and
+diffs the findings against ``results/AUDIT_baseline.json``.
+
+This package ``__init__`` stays import-light on purpose: it pulls in
+only the findings model and the index-dtype policy (no jax-heavy pass
+modules), because ``graph.csr`` imports :func:`index_dtype` at module
+load and the audit CLI must set ``XLA_FLAGS`` before anything touches
+the jax backend.
+"""
+from repro.analysis.dtypes import (  # noqa: F401
+    IndexWidthError,
+    INT32_MAX,
+    index_dtype,
+    jnp_index_dtype,
+)
+from repro.analysis.findings import (  # noqa: F401
+    BaselineDiff,
+    Finding,
+    Report,
+    REPORT_VERSION,
+    diff_reports,
+    merge_findings,
+)
+
+__all__ = [
+    "BaselineDiff",
+    "Finding",
+    "INT32_MAX",
+    "IndexWidthError",
+    "REPORT_VERSION",
+    "Report",
+    "diff_reports",
+    "index_dtype",
+    "jnp_index_dtype",
+    "merge_findings",
+]

@@ -1,0 +1,182 @@
+"""The audit CLI — run every static pass, emit/diff the findings report.
+
+    python -m repro.analysis.audit --out audit.json
+    python -m repro.analysis.audit --check results/AUDIT_baseline.json
+    python -m repro.analysis.audit --write-baseline results/AUDIT_baseline.json
+
+CI runs ``--check``: the fresh report's finding KEYS are diffed against
+the tracked baseline — a new key fails the build (a regression the
+author must fix or consciously pin), a vanished key also fails (a fix
+must be accompanied by a baseline regen, so the improvement is recorded
+and cannot silently regress back).  ``--write-baseline`` is that regen.
+
+Everything here is static: programs are lowered from
+``ShapeDtypeStructs`` and walked as jaxprs/StableHLO text; the only
+device artifacts ever created are a handful of scalar constants.  The
+full run (18 single-device route programs, 4 distributed device
+counts × 8 configurations, 3 synthetic Graph500 scales, the whole-tree
+dead-code scan) is gated at ~60 s in ``benchmarks/run.py audit``.
+
+NOTE the import dance: the distributed passes need 8 host devices, and
+XLA reads ``XLA_FLAGS`` once at backend init — so this module appends
+the flag BEFORE any jax-importing sibling is touched, and
+``repro.analysis.__init__`` stays deliberately jax-free.
+"""
+from __future__ import annotations
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis.findings import (  # noqa: E402
+    Finding,
+    Report,
+    diff_reports,
+    finding_data,
+    merge_findings,
+)
+
+#: tracked tuned profile the compile-set pass audits (the serving
+#: deployment artifact); absence degrades to an info finding.
+DEFAULT_PROFILE = "results/tuned/serve_mix.json"
+
+#: device counts the distributed routes are audited at.  8 is the
+#: forced host device count; every value must divide it.
+P_VALUES = (1, 2, 4, 8)
+
+
+def run_audit(
+    *,
+    profile: Optional[str] = DEFAULT_PROFILE,
+    p_values: tuple[int, ...] = P_VALUES,
+    batch_size: int = 8,
+) -> Report:
+    """Run all five passes and assemble the versioned report."""
+    from repro.analysis.bounds import DEFAULT_SCALES, audit_bounds
+    from repro.analysis.collectives import audit_collectives
+    from repro.analysis.compile_set import audit_compile_set
+    from repro.analysis.deadcode import audit_deadcode
+    from repro.analysis.hostsync import (
+        audit_hot_path_syncs,
+        audit_program_callbacks,
+    )
+    from repro.analysis.routes import enumerate_route_specs
+
+    p_values = tuple(p for p in p_values
+                     if p <= jax.local_device_count())
+
+    # every single-device route program, lowered once and shared by the
+    # callback scan (the collectives pass re-lowers per p internally)
+    single = enumerate_route_specs(p_values=(1,))
+    programs = [prog for spec in single for prog in spec.programs()]
+
+    compile_findings: list[Finding]
+    predicted = None
+    if profile is not None and os.path.exists(profile):
+        from repro.analysis.compile_set import predicted_jit_compiles
+        from repro.api import TriangleEngine
+
+        engine = TriangleEngine(profile=profile)
+        predicted = predicted_jit_compiles(engine, batch_size=batch_size)
+        compile_findings = audit_compile_set(
+            engine, batch_size=batch_size,
+            label=os.path.basename(profile),
+        )
+    else:
+        compile_findings = [Finding(
+            pass_name="compile_set",
+            site="no-profile",
+            severity="info",
+            detail=(
+                f"tuned profile {profile!r} not found — no compile set "
+                f"to enumerate (run `python -m repro.tune.sweep` or "
+                f"point --profile at a tracked profile)"
+            ),
+            data=finding_data(profile=profile),
+        )]
+
+    findings = merge_findings(
+        compile_findings,
+        audit_bounds(),
+        audit_hot_path_syncs(),
+        audit_program_callbacks(programs),
+        audit_collectives(
+            s for s in enumerate_route_specs(p_values=p_values)
+            if s.route == "distributed"
+        ),
+        audit_deadcode(),
+    )
+    return Report(
+        findings=findings,
+        meta={
+            "jax": jax.__version__,
+            "profile": profile if profile and os.path.exists(profile)
+            else None,
+            "p_values": list(p_values),
+            "scales": list(DEFAULT_SCALES),
+            "route_programs": [label for label, _ in programs],
+            "batch_size": batch_size,
+            "predicted_jit_compiles": predicted,
+        },
+    )
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="static program audit: compile-set, int32 bounds, "
+                    "host-sync, collectives, dead code",
+    )
+    ap.add_argument("--out", help="write the fresh report JSON here")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="diff against a tracked baseline; exit 1 on "
+                         "any new or vanished finding")
+    ap.add_argument("--write-baseline", metavar="BASELINE",
+                    help="write the fresh report as the new baseline")
+    ap.add_argument("--profile", default=DEFAULT_PROFILE,
+                    help="tuned profile for the compile-set pass "
+                         f"(default {DEFAULT_PROFILE})")
+    ap.add_argument("--p-max", type=int, default=max(P_VALUES),
+                    help="largest distributed device count to audit")
+    args = ap.parse_args(argv)
+
+    report = run_audit(
+        profile=args.profile,
+        p_values=tuple(p for p in P_VALUES if p <= args.p_max),
+    )
+    counts = report.counts()
+    print(f"audit: {len(report.findings)} findings "
+          f"({', '.join(f'{k}={v}' for k, v in sorted(counts.items()))})")
+    for pass_name, group in sorted(report.by_pass().items()):
+        print(f"  {pass_name}: {len(group)}")
+
+    if args.out:
+        report.save(args.out)
+        print(f"report -> {args.out}")
+    if args.write_baseline:
+        report.save(args.write_baseline)
+        print(f"baseline -> {args.write_baseline}")
+    if args.check:
+        baseline = Report.load(args.check)
+        diff = diff_reports(report, baseline)
+        if diff.clean:
+            print(f"baseline check OK ({args.check})")
+            return 0
+        print(diff.render(baseline_path=args.check))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""Pass 1 — compile-set enumeration.
+
+The serving layer's PR 6/8 claim is "a finite, warmable compile set":
+every flush of trace-covered traffic lands on a jit entry that
+``serve(prewarm=True)`` already compiled.  This pass makes the claim a
+static theorem: it enumerates — without executing anything — every jit
+cache key a prewarmed server can reach from a tuned profile's budget
+cells × the pow2 lanes ladder × the per-cell ``plan_view()`` options,
+and the property test (``tests/test_analysis.py``) asserts the
+enumeration equals the observed compile count of a real prewarmed
+server, with ``jit_compiles == 0`` on a post-warm replay.
+
+The enumeration mirrors the serving hot path exactly:
+
+  * the fused program is ``core.sequential._tc_batch_fused`` — its jit
+    key is (lane-view avals, plan, root, per_vertex);
+  * lane counts come from ``launch.serve_tc.lanes_ladder`` (the SAME
+    helper ``prewarm`` iterates — extracted so predictor and warmer
+    cannot drift);
+  * plans come from the engine's plan cache key
+    ``(budget, pooled meta, options_for(cell).plan_view())``, while
+    ``root``/``per_vertex`` come from the engine's *global* options —
+    faithfully reproducing that ``count_batch_raw`` resolves statics
+    from ``engine.options``, not the per-cell override.
+
+Findings: a census of the enumerated set size (any growth of the
+compile set changes the site key and gates CI), a warning when the
+audited grid is unbounded (the raw request space then has no finite
+compile set — only profile-covered traffic is warmable), and an error
+for any weak-typed aval leaking into the fused program's trace
+signature (Python-scalar leaks fragment the jit cache silently).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+from repro.analysis.findings import Finding, finding_data
+from repro.analysis.routes import abstract_lane_view
+from repro.analysis.walker import weak_typed_invars
+from repro.core.intersect import IntersectPlan
+from repro.graph.csr import ShapeBudget
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileKey:
+    """One predicted ``_tc_batch_fused`` jit cache entry."""
+
+    budget: ShapeBudget
+    lanes: int
+    plan: IntersectPlan
+    root: int
+    per_vertex: bool
+
+
+def enumerate_compile_keys(engine, *, batch_size: int = 8
+                           ) -> list[CompileKey]:
+    """Every fused-program jit key a ``serve(prewarm=True)`` server on
+    ``engine`` can compile — and, because serving flushes route through
+    ``pool_meta`` onto the same ceilings, every key post-warm traffic
+    covered by the profile can land on.  Pure host arithmetic: plans
+    are laid out from metas, nothing is traced or executed.
+
+    A profile-less engine returns ``[]`` (nothing is warmable — there
+    is no trace to predict traffic with), matching ``prewarm``'s no-op.
+    """
+    from repro.launch.serve_tc import lanes_ladder
+
+    profile = getattr(engine, "profile", None)
+    if profile is None:
+        return []
+    root = int(engine.options.root)
+    per_vertex = bool(engine.options.per_vertex)
+    keys: dict = {}
+    for cell in profile.cells:
+        if cell.meta is None:
+            continue
+        pooled = engine.pool_meta(cell.budget, cell.meta)
+        plan = engine.plan_for(_meta_probe(cell.budget, pooled))
+        for lanes in lanes_ladder(batch_size):
+            k = CompileKey(budget=cell.budget, lanes=int(lanes),
+                           plan=plan, root=root, per_vertex=per_vertex)
+            keys[(k.budget, k.lanes, k.plan, k.root, k.per_vertex)] = k
+    return list(keys.values())
+
+
+def _meta_probe(budget: ShapeBudget, meta):
+    """A minimal ``GraphBatch``-shaped carrier for ``plan_for`` — only
+    ``budget`` and ``meta`` feed the plan cache key, so a one-lane
+    host-numpy shell suffices (nothing touches a device)."""
+    import numpy as np
+
+    from repro.graph.csr import GraphBatch
+
+    return GraphBatch(
+        src=np.zeros((1, budget.slot_budget), np.int32),
+        dst=np.zeros((1, budget.slot_budget), np.int32),
+        row_offsets=np.zeros((1, budget.n_budget + 2), np.int32),
+        deg=np.zeros((1, budget.n_budget), np.int32),
+        n_nodes=np.zeros((1,), np.int32),
+        n_edges_dir=np.zeros((1,), np.int32),
+        n_budget=budget.n_budget,
+        meta=meta,
+    )
+
+
+def predicted_jit_compiles(engine, *, batch_size: int = 8) -> int:
+    """How many ``_tc_batch_fused`` entries ``serve(prewarm=True)``
+    will compile on a cold cache — the number the property test holds
+    against the real server's observed ``_jit_cache_size()`` delta."""
+    return len(enumerate_compile_keys(engine, batch_size=batch_size))
+
+
+def audit_compile_set(
+    engine,
+    *,
+    batch_size: int = 8,
+    label: str = "default",
+    check_weak_types: bool = True,
+) -> list[Finding]:
+    """Findings for one engine configuration (see module docstring)."""
+    from repro.launch.serve_tc import lanes_ladder
+
+    findings: list[Finding] = []
+    grid = engine.budgets
+    if grid.max_nodes is None or grid.max_slots is None:
+        findings.append(Finding(
+            pass_name="compile_set",
+            site=f"unbounded-grid:{label}",
+            severity="warning",
+            detail=(
+                "BudgetGrid has no top cell (max_nodes/max_slots None): "
+                "the compile set over raw request sizes is unbounded — "
+                "only profile-covered cells are finite and warmable"
+            ),
+            data=finding_data(
+                min_nodes=grid.min_nodes, min_slots=grid.min_slots,
+                factor=grid.factor,
+            ),
+        ))
+    keys = enumerate_compile_keys(engine, batch_size=batch_size)
+    profile = getattr(engine, "profile", None)
+    cells = ([c for c in profile.cells if c.meta is not None]
+             if profile is not None else [])
+    findings.append(Finding(
+        pass_name="compile_set",
+        site=(f"census:{label}:b{batch_size}:"
+              f"jit{len(keys)}:plan{len({k.plan for k in keys})}"),
+        severity="info",
+        detail=(
+            f"prewarm compile set for {label!r} at batch_size="
+            f"{batch_size}: {len(keys)} fused jit entries over "
+            f"{len(cells)} profile cells × "
+            f"{len(lanes_ladder(batch_size))} lane counts"
+        ),
+        data=finding_data(
+            jit_entries=len(keys),
+            profile_cells=len(cells),
+            lanes=lanes_ladder(batch_size),
+            budgets=sorted({(k.budget.n_budget, k.budget.slot_budget)
+                            for k in keys}),
+        ),
+    ))
+    if check_weak_types and keys:
+        findings.extend(_weak_type_findings(keys[0], label))
+    return findings
+
+
+def _weak_type_findings(key: CompileKey, label: str) -> list[Finding]:
+    """Lower the fused program for one representative compile key and
+    flag weak-typed trace avals (Python-scalar leaks)."""
+    from repro.core import sequential as seq
+
+    gview = abstract_lane_view(key.budget.n_budget,
+                               key.budget.slot_budget, key.lanes)
+    fn = functools.partial(seq._tc_batch_fused, plan=key.plan,
+                           root=key.root, per_vertex=key.per_vertex)
+    leaks = weak_typed_invars(jax.make_jaxpr(fn)(gview))
+    return [
+        Finding(
+            pass_name="compile_set",
+            site=f"weak-type:{label}:{leak.split(':')[0]}",
+            severity="error",
+            detail=(
+                f"weak-typed aval in the fused serving program's trace "
+                f"signature ({leak}) — a Python-scalar leak that "
+                f"fragments the jit cache"
+            ),
+            data=finding_data(leak=leak),
+        )
+        for leak in leaks
+    ]

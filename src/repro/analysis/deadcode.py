@@ -1,0 +1,120 @@
+"""Pass 5 — unused-public-symbol scan (engine-unreachable exports).
+
+A public symbol nobody calls is a liability in a repro codebase: it
+reads as supported surface, bit-rots invisibly (no test exercises it),
+and hides genuine seams — ``graph/partition.py`` sat dead for several
+PRs before ``wedge_baseline``/``parallel_tc`` wired it up, and nothing
+reported it.  This pass makes that state visible: every top-level
+public ``def``/``class``/CONSTANT in ``src/repro`` with zero
+word-boundary references outside its defining module, across the
+production surface (``src/repro`` + ``examples`` + ``benchmarks``), is
+a finding.
+
+Tests are deliberately NOT counted as references: a symbol only its
+own test touches is still engine-unreachable — the test preserves the
+bit-rot, it doesn't justify the export.  Conversely the scan is
+conservative about flagging: any word-boundary hit beyond the
+definition itself (an internal call, a re-export, a docstring
+cross-reference, a string-keyed dispatch) counts, so a reported symbol
+really has zero takers anywhere.  Findings are warnings, pinned in the
+baseline: the gate is on NEW dead exports appearing (or dead ones
+silently vanishing without a baseline regen), not on the existing,
+documented set.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from repro.analysis.findings import Finding, finding_data
+
+#: directories (relative to the repo root) whose .py files count as
+#: the production reference surface.
+REFERENCE_DIRS = ("src/repro", "examples", "benchmarks")
+
+#: scan roots for defined symbols.
+DEFINITION_DIR = "src/repro"
+
+
+def repo_root(start: Path | None = None) -> Path:
+    """Nearest ancestor containing ``src/repro`` — the scan anchor."""
+    here = (start or Path(__file__)).resolve()
+    for parent in (here, *here.parents):
+        if (parent / "src" / "repro").is_dir():
+            return parent
+    raise FileNotFoundError("src/repro not found above " + str(here))
+
+
+def public_symbols(path: Path) -> list[str]:
+    """Top-level public definitions of one module: functions, classes,
+    and UPPER_CASE constants (the shapes a caller would import)."""
+    tree = ast.parse(path.read_text())
+    out: list[str] = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if not node.name.startswith("_"):
+                out.append(node.name)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Name)
+                        and not tgt.id.startswith("_")
+                        and tgt.id.isupper()):
+                    out.append(tgt.id)
+        elif isinstance(node, ast.AnnAssign):
+            tgt = node.target
+            if (isinstance(tgt, ast.Name) and not tgt.id.startswith("_")
+                    and tgt.id.isupper()):
+                out.append(tgt.id)
+    return out
+
+
+def find_unused_symbols(root: Path | None = None) -> list[dict]:
+    """``[{module, symbol}]`` for every public symbol of ``src/repro``
+    with zero references in any OTHER production file."""
+    base = root or repo_root()
+    def_files = sorted((base / DEFINITION_DIR).rglob("*.py"))
+    ref_files = [
+        p for d in REFERENCE_DIRS
+        for p in sorted((base / d).rglob("*.py"))
+        if (base / d).is_dir()
+    ]
+    texts = {p: p.read_text() for p in ref_files}
+    unused: list[dict] = []
+    for path in def_files:
+        if path.name == "__init__.py":
+            continue  # re-export shims: their names live elsewhere
+        module = str(path.relative_to(base / "src")).replace(
+            "/", ".").removesuffix(".py")
+        own = texts.get(path, path.read_text())
+        for sym in public_symbols(path):
+            pat = re.compile(rf"\b{re.escape(sym)}\b")
+            # the definition line itself contributes exactly one hit in
+            # the defining module; anything past that — internal call,
+            # cross-module import, docstring cross-ref — is a taker
+            refs = len(pat.findall(own)) - 1
+            refs += sum(len(pat.findall(text))
+                        for p, text in texts.items() if p != path)
+            if refs <= 0:
+                unused.append({"module": module, "symbol": sym})
+    return unused
+
+
+def audit_deadcode(root: Path | None = None) -> list[Finding]:
+    """One warning finding per engine-unreachable public symbol."""
+    return [
+        Finding(
+            pass_name="deadcode",
+            site=f"unused:{u['module']}:{u['symbol']}",
+            severity="warning",
+            detail=(
+                f"public symbol `{u['symbol']}` in {u['module']} has no "
+                f"references in src/repro, examples, or benchmarks — "
+                f"engine-unreachable export; wire it up, delete it, or "
+                f"document it as a seam and pin it in the baseline"
+            ),
+            data=finding_data(**u),
+        )
+        for u in find_unused_symbols(root)
+    ]

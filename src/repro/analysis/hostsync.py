@@ -1,0 +1,132 @@
+"""Pass 3 — host-sync detection on the serving hot path.
+
+PR 6's latency story depends on the flush pipeline staying
+*asynchronous*: one dispatch per flush, results drained by a readiness
+poll, and exactly one batched ``device_get`` per finished flush
+(``_finalize_one``).  Any new ``device_get`` / ``block_until_ready`` /
+``.item()`` slipped into the hot path — or a callback primitive traced
+into a device program — reintroduces a blocking round trip per request
+and silently destroys the p99 numbers without failing any functional
+test.
+
+Two detectors:
+
+* **AST scan** of the declared hot-path callables (server pump loop,
+  engine dispatch, fused/exact batch orchestration).  Every sync call
+  becomes a finding keyed by ``{qualname}:{attr}`` — the *sanctioned*
+  syncs (the single finalize readback, the exact path's one pooled-
+  degree pull) live in the tracked baseline; a new site is a new key
+  and fails the CI diff.
+* **jaxpr callback scan** over every enumerated route program
+  (``walker.callback_eqns``): io/pure/debug callbacks inside device
+  code are always errors — the engine has no sanctioned callback.
+
+Both are static: no route is executed, no server is started.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+from typing import Callable, Iterable
+
+from repro.analysis.findings import Finding, finding_data
+from repro.analysis.walker import callback_eqns
+
+#: attribute / bare-call names that force a host↔device round trip.
+SYNC_ATTRS = ("device_get", "block_until_ready", "item")
+
+
+def hot_path_callables() -> list[tuple[str, Callable]]:
+    """The audited serving-hot-path surface, by qualname.  Startup code
+    (``prewarm``, profile loading) and failure paths are deliberately
+    excluded — syncing there is free."""
+    from repro import api
+    from repro.core import sequential as seq
+    from repro.launch import serve_tc
+
+    srv = serve_tc.TriangleServer
+    eng = api.TriangleEngine
+    out: list[tuple[str, Callable]] = []
+    for obj, names in (
+        (srv, ("submit", "pump", "_pump_deadlines", "_flush",
+               "_poll_inflight", "_finalize_one", "drain")),
+        (eng, ("plan_for", "pool_meta", "count_batch_raw")),
+        (seq, ("_triangle_count_batch", "batch_plan_for",
+               "_exact_batch_plan")),
+    ):
+        prefix = getattr(obj, "__name__", type(obj).__name__)
+        for name in names:
+            fn = getattr(obj, name)
+            out.append((f"{prefix}.{name}", fn))
+    return out
+
+
+def _sync_calls(qualname: str, fn: Callable) -> dict[str, int]:
+    """``{attr: count}`` of host-sync call sites in one function's
+    source — a call is counted when its callee is an attribute or name
+    in :data:`SYNC_ATTRS` (``jax.device_get(...)``, ``x.item()``, a
+    bare ``device_get(...)`` import alias)."""
+    src = textwrap.dedent(inspect.getsource(fn))
+    tree = ast.parse(src)
+    counts: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func
+        name = None
+        if isinstance(callee, ast.Attribute) and callee.attr in SYNC_ATTRS:
+            name = callee.attr
+        elif isinstance(callee, ast.Name) and callee.id in SYNC_ATTRS:
+            name = callee.id
+        if name is not None:
+            counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+def audit_hot_path_syncs() -> list[Finding]:
+    """AST findings: one per ``(hot-path function, sync attr)`` pair,
+    counting the sites.  The baseline pins the sanctioned pairs; any
+    new pair (or a count change at an existing pair) gates CI."""
+    findings: list[Finding] = []
+    for qualname, fn in hot_path_callables():
+        for attr, count in sorted(_sync_calls(qualname, fn).items()):
+            findings.append(Finding(
+                pass_name="hostsync",
+                site=f"ast:{qualname}:{attr}:x{count}",
+                severity="warning",
+                detail=(
+                    f"{count} `{attr}` host-sync call(s) in hot-path "
+                    f"function {qualname} — every one is a blocking "
+                    f"host/device round trip per flush; the baseline "
+                    f"pins the sanctioned set"
+                ),
+                data=finding_data(qualname=qualname, attr=attr,
+                                  count=count),
+            ))
+    return findings
+
+
+def audit_program_callbacks(
+    programs: Iterable[tuple[str, object]]
+) -> list[Finding]:
+    """jaxpr findings: any callback primitive inside a lowered route
+    program is an error — device code never legitimately calls home."""
+    findings: list[Finding] = []
+    for label, jaxpr in programs:
+        for es in callback_eqns(jaxpr):
+            findings.append(Finding(
+                pass_name="hostsync",
+                site=f"jaxpr:{label}:{es.primitive}",
+                severity="error",
+                detail=(
+                    f"callback primitive `{es.primitive}` traced into "
+                    f"route program {label} at {'/'.join(es.path) or '<top>'}"
+                    f"{' inside a while loop' if es.in_while else ''} — "
+                    f"an implicit host sync on every execution"
+                ),
+                data=finding_data(label=label, primitive=es.primitive,
+                                  path=list(es.path),
+                                  in_while=es.in_while, trips=es.trips),
+            ))
+    return findings

@@ -519,6 +519,18 @@ class TriangleEngine:
             cache=self._plan_cache, stats=self._plan_stats,
         )
 
+    def compile_space(self, *, batch_size: int = 8) -> list:
+        """The engine's statically enumerated jit compile set: every
+        fused-program cache key a ``serve(prewarm=True)`` server over
+        this engine can reach from its tuned profile (budget cells ×
+        pow2 lane ladder × per-cell plan options) — empty when there
+        is no profile.  Pure host arithmetic; nothing compiles.  This
+        is the set ``repro.analysis.audit`` asserts finite and the
+        serving prewarm compiles verbatim."""
+        from repro.analysis.compile_set import enumerate_compile_keys
+
+        return enumerate_compile_keys(self, batch_size=batch_size)
+
     def pool_meta(self, budget, meta):
         """Pool a batch's degree meta up to the engine's per-cell
         high-water mark and return the pooled meta.

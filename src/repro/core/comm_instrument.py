@@ -40,6 +40,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.walker import (
+    COLLECTIVE_PRIMITIVES,
+    iter_eqns,
+    unwrap as _unwrap_jaxpr,
+    uses_axis as _uses_axis,
+)
 from repro.core.comm_model import (
     NUM_SCALAR_REDUCES,
     WIRE_PHASES,
@@ -49,9 +55,6 @@ from repro.core.comm_model import (
     ppermute_wire_bytes,
 )
 
-#: jaxpr primitive names that move data across the device axis.
-COLLECTIVE_PRIMITIVES = ("all_gather", "all_to_all", "ppermute",
-                        "psum", "pmax", "pmin")
 _REDUCE_PRIMS = ("psum", "pmax", "pmin")
 
 
@@ -171,70 +174,38 @@ class CollectiveSite:
     trips: int         # static multiplier applied (enclosing scan lengths)
 
 
-def _subjaxprs(eqn):
-    """``(param_name, jaxpr)`` for every sub-jaxpr of an eqn (while/scan
-    bodies, pjit calls, custom-call branches, ...)."""
-    for k, v in eqn.params.items():
-        vals = v if isinstance(v, (list, tuple)) else [v]
-        for x in vals:
-            if hasattr(x, "eqns"):
-                yield k, x
-            elif hasattr(x, "jaxpr"):
-                yield k, x.jaxpr
-
-
-def _uses_axis(eqn, axis_name: str) -> bool:
-    for key in ("axes", "axis_name"):
-        ax = eqn.params.get(key)
-        if ax is None:
-            continue
-        names = ax if isinstance(ax, (list, tuple)) else (ax,)
-        if axis_name in names:
-            return True
-    return False
-
-
 def collect_collective_sites(
     closed_jaxpr, *, n: int, p: int, axis_name: str = "p"
 ) -> list[CollectiveSite]:
     """Inventory every collective over ``axis_name`` in a (closed) jaxpr,
     classified by phase and priced by the shared wire conventions.
 
-    Walks sub-jaxprs recursively: collectives inside ``scan`` bodies get
-    the (static) trip count as a multiplier; collectives inside ``while``
+    Traversal is the shared walker (``repro.analysis.walker`` — the PR 4
+    machinery, extracted): collectives inside ``scan`` bodies get the
+    (static) trip count as a multiplier; collectives inside ``while``
     bodies are flagged per-sweep (the BFS frontier exchange — the only
     dynamically-trip-counted loop in the program)."""
-    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
     sites: list[CollectiveSite] = []
     # program-order flag: all-gathers BEFORE the transpose all-to-all
     # are the splitter gossip, gathers after it are the horizontal
     # exchange — structural attribution, immune to the shape collision
     # where cap_hedge happens to equal p (tiny graphs)
-    seen_a2a = [False]
-
-    def visit(jx, in_while: bool, trips: int):
-        for eqn in jx.eqns:
-            name = eqn.primitive.name
-            if name in COLLECTIVE_PRIMITIVES and _uses_axis(eqn, axis_name):
-                aval = eqn.invars[0].aval
-                nbytes = int(math.prod(aval.shape)) * aval.dtype.itemsize
-                site = _price_site(
-                    name, eqn, aval, nbytes, n=n, p=p,
-                    in_while=in_while, trips=trips,
-                    before_transpose=not seen_a2a[0],
-                )
-                if name == "all_to_all":
-                    seen_a2a[0] = True
-                sites.append(site)
-                continue
-            for key, sub in _subjaxprs(eqn):
-                w = in_while or (name == "while" and key == "body_jaxpr")
-                t = trips
-                if name == "scan":
-                    t = trips * int(eqn.params.get("length", 1))
-                visit(sub, w, t)
-
-    visit(jaxpr, False, 1)
+    seen_a2a = False
+    for es in iter_eqns(_unwrap_jaxpr(closed_jaxpr)):
+        name = es.primitive
+        if name not in COLLECTIVE_PRIMITIVES or not _uses_axis(
+            es.eqn, axis_name
+        ):
+            continue
+        aval = es.eqn.invars[0].aval
+        nbytes = int(math.prod(aval.shape)) * aval.dtype.itemsize
+        sites.append(_price_site(
+            name, es.eqn, aval, nbytes, n=n, p=p,
+            in_while=es.in_while, trips=es.trips,
+            before_transpose=not seen_a2a,
+        ))
+        if name == "all_to_all":
+            seen_a2a = True
     return sites
 
 

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.dtypes import index_dtype, jnp_index_dtype
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +110,14 @@ def from_edges(
     slots = int(num_slots) if num_slots is not None else m2
     if slots < m2:
         raise ValueError(f"num_slots={slots} < 2m={m2}")
+    # index-dtype policy (analysis/dtypes): vertex ids are bounded by the
+    # sentinel (n), CSR offsets by the slot count.  Past 2**31 slots the
+    # historical unconditional int32 cast wrapped every high offset
+    # negative SILENTLY (np.int64 cumsum -> jnp int32); now the bound
+    # picks the dtype and an un-representable graph fails loudly here,
+    # before any multi-GiB buffer is materialized.
+    vid_dt = jnp_index_dtype(n_nodes, site="csr.from_edges vertex ids")
+    off_dt = jnp_index_dtype(slots, site="csr.from_edges row_offsets")
     pad = slots - m2
     s = np.concatenate([s, np.full(pad, n_nodes, dtype=np.int64)])
     d = np.concatenate([d, np.full(pad, n_nodes, dtype=np.int64)])
@@ -116,11 +126,30 @@ def from_edges(
     np.cumsum(counts, out=row_offsets[1 : n_nodes + 2])
     row_offsets[n_nodes + 1] = slots
     return Graph(
-        src=jnp.asarray(s, dtype=jnp.int32),
-        dst=jnp.asarray(d, dtype=jnp.int32),
-        row_offsets=jnp.asarray(row_offsets, dtype=jnp.int32),
-        deg=jnp.asarray(counts[:n_nodes], dtype=jnp.int32),
-        n_edges_dir=jnp.asarray(m2, dtype=jnp.int32),
+        src=jnp.asarray(s, dtype=vid_dt),
+        dst=jnp.asarray(d, dtype=vid_dt),
+        row_offsets=jnp.asarray(row_offsets, dtype=off_dt),
+        deg=jnp.asarray(counts[:n_nodes], dtype=vid_dt),
+        n_edges_dir=jnp.asarray(m2, dtype=off_dt),
+        n_nodes=int(n_nodes),
+    )
+
+
+def abstract_graph(n_nodes: int, num_slots: int) -> Graph:
+    """A :class:`Graph` pytree of ``jax.ShapeDtypeStruct`` leaves at the
+    index-dtype policy's dtypes — the form ``jax.eval_shape`` /
+    ``jax.make_jaxpr`` consume, so Graph500-scale graphs (scale 26:
+    2**31 slots; scale 36: 2**36 vertices) can be *reasoned about*
+    (bounds audit, dtype regression tests) without materializing a
+    single element."""
+    vid = index_dtype(n_nodes)
+    off = index_dtype(num_slots)
+    return Graph(
+        src=jax.ShapeDtypeStruct((num_slots,), vid),
+        dst=jax.ShapeDtypeStruct((num_slots,), vid),
+        row_offsets=jax.ShapeDtypeStruct((n_nodes + 2,), off),
+        deg=jax.ShapeDtypeStruct((n_nodes,), vid),
+        n_edges_dir=jax.ShapeDtypeStruct((), off),
         n_nodes=int(n_nodes),
     )
 
@@ -408,6 +437,11 @@ def from_edges_batch(
             max((s.shape[0] for (s, _), _ in norm), default=0) // 2,
         )
     nb, slots = budget.n_budget, budget.slot_budget
+    # same index-dtype policy as from_edges: the lane sentinel bounds
+    # vertex ids, the slot budget bounds offsets
+    vid_dt = jnp_index_dtype(nb, site="csr.from_edges_batch vertex ids")
+    off_dt = jnp_index_dtype(slots,
+                             site="csr.from_edges_batch row_offsets")
     B = int(batch_size) if batch_size is not None else max(1, len(norm))
     src = np.full((B, slots), nb, dtype=np.int64)
     dst = np.full((B, slots), nb, dtype=np.int64)
@@ -451,12 +485,12 @@ def from_edges_batch(
             ),
         )
     return GraphBatch(
-        src=jnp.asarray(src, jnp.int32),
-        dst=jnp.asarray(dst, jnp.int32),
-        row_offsets=jnp.asarray(row, jnp.int32),
-        deg=jnp.asarray(deg, jnp.int32),
-        n_nodes=jnp.asarray(n_nodes, jnp.int32),
-        n_edges_dir=jnp.asarray(m2s, jnp.int32),
+        src=jnp.asarray(src, vid_dt),
+        dst=jnp.asarray(dst, vid_dt),
+        row_offsets=jnp.asarray(row, off_dt),
+        deg=jnp.asarray(deg, vid_dt),
+        n_nodes=jnp.asarray(n_nodes, vid_dt),
+        n_edges_dir=jnp.asarray(m2s, off_dt),
         n_budget=nb,
         meta=meta,
     )

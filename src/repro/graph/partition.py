@@ -5,6 +5,20 @@ per processor).
 CSR slices are as equal as possible — the paper's non-uniform vertex
 partition.  ``shard_edges`` materializes per-shard, equal-capacity edge
 arrays (sentinel padded) ready to feed ``shard_map``.
+
+**This module is the documented scale-past-host-memory seam** (ROADMAP
+item 5).  Today the engine's distributed route re-derives its shards
+inside ``parallel_tc`` from a host-resident edge list; pushing past one
+host's memory means computing ``vertex_partition`` bounds from streamed
+degree counts and feeding ``shard_edges``-shaped chunks per host,
+without ever materializing the global CSR.  Two audit findings pin the
+contract until then: the bounds pass reports that host-side
+``row_offsets`` need int64 from Graph500 scale 26 (and vertex ids from
+scale 36) — any multi-host ingestion built on this seam must carry the
+``analysis/dtypes.index_dtype`` policy end to end, exactly as
+*Distributed-Memory Parallel Algorithms for Counting and Listing
+Triangles* (arXiv 1706.05151) prescribes for partition bookkeeping at
+those scales.
 """
 from __future__ import annotations
 

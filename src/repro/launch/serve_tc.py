@@ -315,16 +315,11 @@ class TriangleServer:
         profile = getattr(self.engine, "profile", None)
         if profile is None:
             return
-        lanes_ladder, lanes = [], 1
-        while lanes < self.batch_size:
-            lanes_ladder.append(lanes)
-            lanes <<= 1
-        lanes_ladder.append(self.batch_size)
         for cell in profile.cells:
             if cell.meta is None:
                 continue  # no ceiling — nothing to key the warm plan on
             pooled = self.engine.pool_meta(cell.budget, cell.meta)
-            for lanes in lanes_ladder:
+            for lanes in lanes_ladder(self.batch_size):
                 gb = from_edges_batch(
                     [], budget=cell.budget, batch_size=lanes
                 )
@@ -797,6 +792,21 @@ def synth_requests(
         else:
             reqs.append(gen.complete(int(rng.integers(5, 14))))
     return reqs
+
+
+def lanes_ladder(batch_size: int) -> list[int]:
+    """The pow2 lane counts a server of this ``batch_size`` can flush
+    at: 1, 2, 4, ... then ``batch_size`` itself.  ONE definition shared
+    by ``prewarm`` (which compiles exactly these) and the compile-set
+    auditor (``repro.analysis.compile_set``, which predicts them) — the
+    two cannot drift."""
+    ladder, lanes = [], 1
+    batch_size = int(batch_size)
+    while lanes < batch_size:
+        ladder.append(lanes)
+        lanes <<= 1
+    ladder.append(batch_size)
+    return ladder
 
 
 def _jit_cache_size() -> int:
