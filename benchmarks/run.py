@@ -46,6 +46,14 @@ no argument runs everything.
               ``results/BENCH_autotune.json``.  ``tune_smoke`` is the CI
               variant (smaller trace + space; writes the untracked
               ``results/BENCH_autotune_smoke.json``)
+  stream   -> streaming subsystem acceptance (DESIGN.md §13): ~20 mixed
+              insert/delete batches of <= 1% of edges on scale-12 RMAT;
+              the delta session must stay bit-identical to a full
+              recount (totals AND per-vertex) after EVERY batch and
+              answer updates >= 5x faster than recounting; writes
+              ``results/BENCH_stream.json``.  ``stream_smoke`` is the
+              CI variant (scale 8, 5 batches, bit-identity only —
+              writes the untracked ``results/BENCH_stream_smoke.json``)
   audit    -> static program audit wall-time gate: the full
               ``repro.analysis.audit`` run (compile-set, int32 bounds,
               host-sync, collectives, dead code over every route) plus
@@ -242,6 +250,24 @@ def bench_tune(smoke: bool = False):
         measure_tune(num_requests=96, out=out)
 
 
+def bench_stream(smoke: bool = False):
+    """Streaming acceptance (DESIGN.md §13): bit-identical totals and
+    per-vertex credit vs a full recount after every mutation batch, and
+    the >= 5x updates/sec bound at <= 1% edges mutated per batch on
+    scale-12 RMAT.  A violated claim exits nonzero.  Writes
+    ``results/BENCH_stream.json``; ``stream_smoke`` is the CI variant
+    (scale 8, correctness only, untracked
+    ``results/BENCH_stream_smoke.json``)."""
+    from benchmarks.stream_bench import measure_stream
+
+    if smoke:
+        out = os.path.join(_ROOT, "results", "BENCH_stream_smoke.json")
+        measure_stream(scale=8, batches=5, smoke=True, out=out)
+    else:
+        out = os.path.join(_ROOT, "results", "BENCH_stream.json")
+        measure_stream(scale=12, batches=20, out=out)
+
+
 def bench_roofline():
     from benchmarks.roofline import RESULTS, analyze
 
@@ -290,6 +316,8 @@ BENCHES = {
     "comm_smoke": lambda: bench_comm(smoke=True),
     "tune": bench_tune,
     "tune_smoke": lambda: bench_tune(smoke=True),
+    "stream": bench_stream,
+    "stream_smoke": lambda: bench_stream(smoke=True),
     "audit": bench_audit,
     "roofline": bench_roofline,
 }

@@ -1,0 +1,152 @@
+"""Streaming subsystem acceptance gate (DESIGN.md §13).
+
+The claim: at small mutation rates (<= 1% of edges per batch) the
+delta-probe session answers updates **at least 5x faster** than
+re-counting the graph from scratch after every batch — while staying
+**bit-identical** to the recount, totals AND per-vertex credit, after
+every single batch.  Correctness is asserted unconditionally; the 5x
+throughput bound is asserted in the full bench (``stream``) and only
+reported by the CI smoke variant (``stream_smoke``), whose shared
+runners are too noisy to gate on wall time.
+
+Method: scale-12 RMAT, ~20 mixed insert/delete batches each touching
+<= 1% of the live edge set, refresh disabled (``stream_staleness`` =
+inf) so the timed path is PURE delta maintenance — a lazy refresh
+would smuggle full recounts into the "incremental" lane.  The recount
+baseline re-packs the mutated edge list and runs the same engine's
+local route with the same options; each batch's recount is run twice
+and the warm (min) time kept, so jit compiles for the drifting graph
+shape are charged to neither side.  Writes ``results/BENCH_stream.json``
+(smoke: the untracked ``results/BENCH_stream_smoke.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.api import TCOptions, TriangleEngine
+from repro.graph import generators as gen
+from repro.graph.csr import from_edges
+
+SPEEDUP_BOUND = 5.0
+MUTATION_FRAC = 0.01
+
+
+def _mutation_batch(state, rng, k: int):
+    """k mixed mutations valid for ``state``: ~half deletes drawn from
+    the live edge set, ~half inserts drawn from absent pairs."""
+    n = state.n_nodes
+    present = state.edges()
+    n_del = min(k // 2, present.shape[0])
+    take = rng.choice(present.shape[0], n_del, replace=False)
+    ops = [-1] * n_del
+    rows = [tuple(int(x) for x in present[t]) for t in take]
+    need = k - n_del
+    while need > 0:
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        if u == v or state.has_edges([(u, v)])[0]:
+            continue
+        ops.append(+1)
+        rows.append((u, v))
+        need -= 1
+    order = rng.permutation(len(ops))
+    return (np.asarray(ops, np.int8)[order],
+            np.asarray(rows, np.int64)[order])
+
+
+def measure_stream(
+    scale: int = 12,
+    batches: int = 20,
+    seed: int = 0,
+    smoke: bool = False,
+    out: str | None = None,
+) -> dict:
+    edges, n = gen.rmat(scale, 16, seed=seed)
+    opts = TCOptions(backend="jnp", per_vertex=True, stream_staleness=1e9)
+    engine = TriangleEngine(opts)
+    sess = engine.stream((edges, n))
+    m0 = sess.num_edges
+    per_batch = max(1, int(MUTATION_FRAC * m0))
+    rng = np.random.default_rng(seed + 1)
+
+    # warm BOTH lanes' jit caches off the clock: a few mutation batches
+    # compile the canonical delta-probe programs, one local count
+    # compiles the recount pipeline (per-batch recounts below also run
+    # twice and keep the warm min, so neither side is charged compiles)
+    for _ in range(4):
+        sess.apply(_mutation_batch(sess.state, rng, per_batch))
+    engine.count(from_edges(sess.state.edges(), n), route="local")
+
+    inc_s, rec_s = [], []
+    refreshes0 = sess.refreshes
+    for _ in range(batches):
+        batch = _mutation_batch(sess.state, rng, per_batch)
+        t0 = time.perf_counter()
+        up = sess.apply(batch)
+        inc_s.append(time.perf_counter() - t0)
+        assert up.exact and not up.refreshed
+        # the from-scratch baseline: re-pack + full local count (warm
+        # timing — second run hits the jit cache for this shape)
+        cur = sess.state.edges()
+        best = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            g = from_edges(cur, n)
+            rep = engine.count(g, route="local", options=opts)
+            best = min(best, time.perf_counter() - t0)
+        rec_s.append(best)
+        # the gate that matters: bit-identity after EVERY batch
+        assert rep.triangles == sess.triangles, (
+            f"stream total {sess.triangles} != recount {rep.triangles}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(rep.per_vertex, np.int64), sess.per_vertex
+        )
+    assert sess.refreshes == refreshes0, "refresh leaked into the gate"
+    assert sess.staleness > 0.0  # the staleness ledger really tracked
+
+    inc = float(np.sum(inc_s))
+    rec = float(np.sum(rec_s))
+    speedup = rec / inc
+    ups_inc = batches * per_batch / inc
+    ups_rec = batches * per_batch / rec
+    row = {
+        "scale": scale,
+        "batches": batches,
+        "edges_initial": m0,
+        "mutations_per_batch": per_batch,
+        "mutation_frac": MUTATION_FRAC,
+        "triangles_final": sess.triangles,
+        "incremental_s": inc,
+        "recount_s": rec,
+        "updates_per_s_incremental": ups_inc,
+        "updates_per_s_recount": ups_rec,
+        "speedup": speedup,
+        "bound": SPEEDUP_BOUND,
+        "probes": sess.probes,
+        "staleness_final": sess.staleness,
+        "refreshes": sess.refreshes,
+        "bit_identical": True,  # asserted above, every batch
+        "pass": speedup >= SPEEDUP_BOUND,
+        "smoke": smoke,
+    }
+    print(f"stream_incremental,{inc / batches * 1e6:.0f},"
+          f"updates_per_s={ups_inc:.0f}|batch={per_batch}")
+    print(f"stream_recount,{rec / batches * 1e6:.0f},"
+          f"updates_per_s={ups_rec:.0f}")
+    print(f"stream_speedup,0,x{speedup:.1f}|bound=x{SPEEDUP_BOUND:.0f}"
+          f"|bit_identical=True|pass={row['pass']}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"stream_json,0,written={os.path.normpath(out)}")
+    if not smoke:
+        assert row["pass"], (
+            f"stream speedup x{speedup:.2f} under the x{SPEEDUP_BOUND:.0f} "
+            f"acceptance bound at {MUTATION_FRAC:.0%} mutation rate"
+        )
+    return row

@@ -13,7 +13,11 @@ The local route contributes TWO programs (its exact pipeline is a plan
 jit plus a run jit separated by one host sync); the batch/serving route
 is the fused single-jit hot path; find is the per-bucket probe block;
 distributed is the full shard_map body, lowered exactly like PR 4's
-dry-run path (``comm_instrument.measure_tc_comm``).
+dry-run path (``comm_instrument.measure_tc_comm``); stream is the
+level-free exact-planned delta probe the streaming subsystem issues per
+mutation batch (``repro.stream.delta.probe_sum`` — the one device
+program of the stream route; its refresh reuses the local route's
+programs verbatim).
 """
 from __future__ import annotations
 
@@ -120,7 +124,7 @@ class RouteSpec:
     pairs without executing anything."""
 
     name: str
-    route: str                # local | batch | find | distributed
+    route: str                # local | batch | find | distributed | stream
     backend: str
     interpret: bool
     per_vertex: bool
@@ -140,6 +144,8 @@ class RouteSpec:
             return self._local_jaxprs()
         if self.route == "find":
             return [(f"{self.name}/find_block", self._find_jaxpr())]
+        if self.route == "stream":
+            return [(f"{self.name}/delta_probe", self._stream_jaxpr())]
         raise ValueError(f"unknown route {self.route!r}")
 
     # ---------------------------------------------------- batch route
@@ -194,6 +200,37 @@ class RouteSpec:
         )
         return jax.make_jaxpr(fn)(g, qrow, qrow, level)
 
+    # ---------------------------------------------------- stream route
+    def _stream_jaxpr(self):
+        from repro.core.intersect import (
+            DEFAULT_BUCKET_WIDTHS,
+            CsrAdjacency,
+            plan_buckets,
+            run_plan,
+        )
+
+        # a synthetic net-batch degree profile spanning the default
+        # width grid — the exact host plan the session prices per batch
+        # (stream.delta.probe_sum).  The device program is ONE
+        # level-free run_plan over the delta query block; the pinned
+        # profile keeps the lowered structure (and the baseline's site
+        # keys) identical on any host.
+        ds = np.array([1, 2, 2, 4, 4, 8, 8, 16], dtype=np.int64)
+        plan = plan_buckets(
+            ds, 2 * ds, bucket_widths=DEFAULT_BUCKET_WIDTHS,
+            backend=self.backend, interpret=self.interpret,
+        )
+        g = abstract_single_graph(self.n_budget, self.slot_budget)
+        q = jax.ShapeDtypeStruct((int(ds.size),), jnp.int32)
+
+        def fn(flat, row_offsets, deg, qu, qw):
+            adj = CsrAdjacency(flat=flat, row_offsets=row_offsets,
+                               deg=deg, n_nodes=self.n_budget)
+            return run_plan(adj, qu, qw, plan, level=None,
+                            per_vertex=self.per_vertex)
+
+        return jax.make_jaxpr(fn)(g.dst, g.row_offsets, g.deg, q, q)
+
     # ---------------------------------------------- distributed route
     def shard_program(self) -> tuple[Callable, tuple]:
         """The shard_map program + its ShapeDtypeStruct args — shared
@@ -236,8 +273,8 @@ def enumerate_route_specs(
     batch: int = 2,
     p_values: tuple[int, ...] = (1,),
 ) -> list[RouteSpec]:
-    """The full audited route space: local/batch/find × backend ×
-    per_vertex, plus distributed × backend × per_vertex × mode × p.
+    """The full audited route space: local/batch/find/stream × backend
+    × per_vertex, plus distributed × backend × per_vertex × mode × p.
     ``p_values`` beyond the local device count are skipped by callers
     that execute lowering (the CLI forces 8 host devices first).
 
@@ -261,6 +298,10 @@ def enumerate_route_specs(
                     name=f"find/{tag}", route="find", backend=backend,
                     interpret=interpret, per_vertex=pv, **shape,
                 ))
+            specs.append(RouteSpec(
+                name=f"stream/{tag}", route="stream", backend=backend,
+                interpret=interpret, per_vertex=pv, **shape,
+            ))
             for mode in HEDGE_MODES:
                 for p in p_values:
                     specs.append(RouteSpec(

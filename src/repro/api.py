@@ -56,11 +56,15 @@ from repro.graph.csr import (
     from_edges,
     from_edges_batch,
 )
+from repro.stream.session import StreamSession, StreamStats, StreamUpdate
 
 __all__ = [
     "ROUTES",
     "ApproxEstimate",
     "Overflow",
+    "StreamSession",
+    "StreamStats",
+    "StreamUpdate",
     "TCOptions",
     "TriangleEngine",
     "TriangleReport",
@@ -75,8 +79,12 @@ __all__ = [
 #: degraded lane: a host-side wedge-sampled estimate with error bars
 #: (``auto`` never picks it — the serving layer degrades to it only
 #: under overload or after the exact routes failed, and says so in the
-#: report's provenance).
-ROUTES = ("auto", "local", "batch", "distributed", "approx")
+#: report's provenance).  ``stream`` is the mutable-graph route: a
+#: session handle (``TriangleEngine.stream()``) that maintains counts
+#: incrementally under edge mutations — ``auto`` never picks it either
+#: (a stream is a *stateful* conversation, not a one-shot request;
+#: ``count(route="stream")`` answers through a fresh one-shot session).
+ROUTES = ("auto", "local", "batch", "distributed", "approx", "stream")
 
 _BACKENDS = ("auto", "jnp", "pallas")
 _HEDGE_MODES = ("auto", "allgather", "ring")
@@ -152,6 +160,27 @@ class TCOptions:
                       distributed path; a timed-out request retries once
                       at a smaller hedge buffer, then degrades.
                       ``None`` = block forever (legacy).
+
+    Streaming route knobs (``repro.stream`` — DESIGN.md §13)
+      stream_buffer:  mutation buffer capacity — an ``apply`` stream
+                      longer than this is split into buffer-sized
+                      batches, each applied and delta-probed
+                      independently (bounds per-batch probe width and
+                      host work).
+      stream_staleness: cover-set staleness threshold — the fraction of
+                      vertices touched since the last refresh beyond
+                      which the session re-derives BFS levels and the
+                      cover classification with one full count (in
+                      between, the session answers exactly in the
+                      level-free N-hat regime: ``c1``/``c2`` ``None``).
+      stream_exact_edges: per-batch exact budget — a batch changing more
+                      edges than this skips the exact delta probes and
+                      answers through the reservoir-sampled approximate
+                      lane (error bars) until the next refresh.
+                      ``None`` = always exact.
+      stream_approx_rate: the approximate lane's edge-reservoir sampling
+                      rate (reservoir capacity ≈ rate × initial edge
+                      count, floor 64).
     """
 
     # -- shared engine knobs ------------------------------------------
@@ -182,6 +211,11 @@ class TCOptions:
     approx_samples: int = 8192
     approx_on_overload: bool = True
     distributed_timeout_s: Optional[float] = None
+    # -- streaming route ----------------------------------------------
+    stream_buffer: int = 4096
+    stream_staleness: float = 0.25
+    stream_exact_edges: Optional[int] = None
+    stream_approx_rate: float = 0.05
 
     def __post_init__(self):
         object.__setattr__(
@@ -236,6 +270,26 @@ class TCOptions:
         if self.approx_samples <= 0:
             raise ValueError(
                 f"approx_samples must be positive; got {self.approx_samples}"
+            )
+        if self.stream_buffer <= 0:
+            raise ValueError(
+                f"stream_buffer must be positive; got {self.stream_buffer}"
+            )
+        if self.stream_staleness <= 0:
+            raise ValueError(
+                f"stream_staleness must be positive; "
+                f"got {self.stream_staleness}"
+            )
+        if (self.stream_exact_edges is not None
+                and int(self.stream_exact_edges) <= 0):
+            raise ValueError(
+                f"stream_exact_edges must be positive; "
+                f"got {self.stream_exact_edges}"
+            )
+        if not 0.0 < self.stream_approx_rate <= 1.0:
+            raise ValueError(
+                f"stream_approx_rate must lie in (0, 1]; "
+                f"got {self.stream_approx_rate}"
             )
 
     def resolved(self) -> "TCOptions":
@@ -312,6 +366,16 @@ class TriangleReport:
     :meth:`transitivity` and :meth:`top_k` derive the classic analytics.
     The approx route answers ``per_vertex=None`` — an estimator has no
     attribution to stand behind.
+
+    Stream-route reports (``route="stream"``) always carry ``stream``
+    (the session's :class:`~repro.stream.session.StreamStats`:
+    staleness metric, refresh/probe counters, exact-lane flag).  A
+    freshly-refreshed session reports the full cover-edge payload
+    (``levels``, ``c1``/``c2``, measured ``k``); a session with pending
+    mutations answers exactly in the level-free N-hat regime
+    (``c1``/``c2`` ``None``, ``k`` ``NaN``); an over-budget session
+    answers like the approx route (``approx`` payload, no attribution)
+    until its next refresh.
     """
 
     triangles: int
@@ -332,6 +396,7 @@ class TriangleReport:
     approx: Optional[ApproxEstimate] = None
     per_vertex: Optional[np.ndarray] = None
     degrees: Optional[np.ndarray] = None
+    stream: Optional[StreamStats] = None
 
     def _require_per_vertex(self) -> None:
         if self.per_vertex is None or self.degrees is None:
@@ -705,6 +770,15 @@ class TriangleEngine:
             return self.count_approx(
                 (edges, n_nodes) if g is None else g, options=o
             )
+        if r == "stream":
+            # a fresh one-shot session: opening it runs the full local
+            # count (the session's initial refresh), so this is the
+            # zero-mutation streaming baseline — same numbers, stream
+            # provenance (``report.stream``).  Long-lived sessions come
+            # from ``stream()`` directly.
+            return self.stream(
+                (edges, n_nodes) if g is None else g, options=o
+            ).count()
         if r == "batch":
             # pack the RAW edges once (a Graph input round-trips to the
             # host; an edge-list input never builds the intermediate CSR)
@@ -835,6 +909,32 @@ class TriangleEngine:
             route="approx", backend=backend,
             plan_id=f"wedge-sample/{est.samples}", options=o,
             approx=est,
+        )
+
+    def stream(
+        self,
+        graph_or_edges: Union[Graph, EdgeList],
+        *,
+        options: Optional[TCOptions] = None,
+        seed: int = 0,
+    ) -> StreamSession:
+        """Open a live :class:`~repro.stream.session.StreamSession` over
+        this engine (DESIGN.md §13).
+
+        The session ingests edge mutation streams in capacity-budgeted
+        batches (``stream_buffer``), keeps the exact triangle total (and
+        per-vertex credit, with ``per_vertex=True``) current via the
+        batch delta rule — every probe runs through this engine's
+        ``run_plan`` pipeline — and re-derives the cover-edge state
+        lazily once staleness passes ``stream_staleness``.  Batches
+        whose net change exceeds ``stream_exact_edges`` flip the session
+        to the reservoir-sampled approximate lane until its next
+        refresh.  ``session.count()`` answers a ``route="stream"``
+        :class:`TriangleReport` at any point; ``seed`` drives only the
+        approximate lane's reservoir."""
+        return StreamSession(
+            self, graph_or_edges, options=options or self.options,
+            seed=seed,
         )
 
     def find(

@@ -70,6 +70,19 @@ def _normalize_edges(edges: np.ndarray, n_nodes: int) -> tuple[np.ndarray, np.nd
     """Shared host-side packing step: dedup, drop self-loops, symmetrize,
     CSR-sort.  Returns ``(src, dst)`` int64 directed arrays of length 2m.
 
+    **Duplicate-edge semantics** (the multiplicity contract every layer
+    above inherits): the graph is a simple undirected SET of edges.
+    Duplicate rows — repeats of ``(u, v)``, its reverse ``(v, u)``, or
+    both — collapse to ONE undirected edge via ``np.unique`` over the
+    packed ``lo * n + hi`` keys, and self-loops are dropped, silently:
+    an edge is either present or absent, never counted with
+    multiplicity.  The streaming subsystem (``repro.stream``) makes the
+    same rule *observable* per update instead of silent: inserting a
+    present edge / deleting an absent one is an idempotent no-op with a
+    structured ``noop-present`` / ``noop-absent`` status, so a mutable
+    session and a fresh ``from_edges`` pack of its edge list can never
+    disagree on the edge set.
+
     Handles the degenerate inputs the batched serving path must accept —
     an empty edge array and/or ``n_nodes == 0`` (the empty-graph padding
     lanes of a partial batch) — without tripping the ``// n_nodes``
@@ -102,8 +115,12 @@ def from_edges(
 ) -> Graph:
     """Build a ``Graph`` from an undirected edge array ``int[any, 2]``.
 
-    Deduplicates, drops self-loops, symmetrizes and CSR-sorts.  ``num_slots``
-    pads the directed edge list to a fixed budget (>= 2m).
+    Deduplicates, drops self-loops, symmetrizes and CSR-sorts (see
+    ``_normalize_edges`` for the duplicate-edge contract: edges form a
+    set — duplicates and orientation flips collapse to one undirected
+    edge, so ``from_edges(g_edges + g_edges, n)`` is ``from_edges(
+    g_edges, n)`` exactly).  ``num_slots`` pads the directed edge list
+    to a fixed budget (>= 2m).
     """
     s, d = _normalize_edges(edges, n_nodes)
     m2 = s.shape[0]

@@ -285,6 +285,11 @@ class TriangleServer:
         #: cannot be cancelled); this counts the leak we chose over
         #: blocking the serving loop
         self.abandoned_distributed = 0
+        # -- streaming sessions (DESIGN.md §13) ------------------------
+        #: named live :class:`~repro.stream.session.StreamSession`
+        #: handles — mutation requests address graphs by name
+        self._sessions: dict[str, object] = {}
+        self.stream_mutations = 0
         # -- autotuning hooks (DESIGN.md §11) --------------------------
         #: optional ``repro.tune.trace.TraceRecorder`` capturing every
         #: well-formed request (shape signature + replayable payload)
@@ -406,6 +411,62 @@ class TriangleServer:
         if len(q) >= self.batch_size:
             self._flush(budget, cause="size")
         return rid
+
+    # ------------------------------------- streaming sessions (§13)
+    def stream_session(
+        self, name: str, graph_or_edges=None, *, options=None, seed: int = 0
+    ):
+        """Open (or fetch) the named live streaming session.
+
+        With ``graph_or_edges`` given, opens a fresh
+        :class:`~repro.stream.session.StreamSession` over this server's
+        engine and registers it under ``name`` (re-opening a live name
+        raises — silently dropping a session's exact state would be a
+        correctness bug, close it first).  With ``graph_or_edges``
+        omitted, returns the already-open session of that name.
+        """
+        if graph_or_edges is None:
+            try:
+                return self._sessions[name]
+            except KeyError:
+                raise KeyError(
+                    f"no open stream session named {name!r}; open one "
+                    "with stream_session(name, (edges, n_nodes))"
+                ) from None
+        if name in self._sessions:
+            raise ValueError(
+                f"stream session {name!r} is already open; "
+                "close_session() it before re-opening the name"
+            )
+        sess = self.engine.stream(graph_or_edges, options=options,
+                                  seed=seed)
+        self._sessions[name] = sess
+        return sess
+
+    def mutate(self, name: str, updates, *, refresh=None):
+        """Apply one edge mutation request to the named session and
+        return its :class:`~repro.stream.session.StreamUpdate` (statuses
+        per update, exact delta when the batch stayed under budget, the
+        session's running total).  Mutations are synchronous host+probe
+        work — they never enter the batched device queues."""
+        sess = self.stream_session(name)
+        up = sess.apply(updates, refresh=refresh)
+        self.stream_mutations += len(up.statuses)
+        return up
+
+    def stream_count(self, name: str):
+        """The named session's current ``route="stream"``
+        :class:`~repro.api.TriangleReport` — exact (with per-vertex
+        credit when enabled) unless the session is on its approximate
+        lane, and always carrying the session's ``StreamStats``."""
+        return self.stream_session(name).count()
+
+    def close_session(self, name: str):
+        """Close the named session and return its final
+        :class:`~repro.stream.session.StreamStats`."""
+        sess = self.stream_session(name)
+        del self._sessions[name]
+        return sess.stats()
 
     def _record_trace(self, rid, edges, n_nodes, route, budget, rel) -> None:
         """Feed one validated, routed request to the attached trace
@@ -750,6 +811,8 @@ class TriangleServer:
             "deadline_flushes": self.deadline_flushes,
             "size_flushes": self.size_flushes,
             "approx_answers": self.approx_answers,
+            "stream_sessions": len(self._sessions),
+            "stream_mutations": self.stream_mutations,
             "pending": sum(len(q) for q in self._pending.values()),
             "inflight": len(self._inflight),
             "flush_cost_ewma_ms": {

@@ -1,0 +1,37 @@
+"""Streaming subsystem: incremental triangle maintenance under edge
+mutation streams (DESIGN.md §13).
+
+Three layers, all behind the ``TriangleEngine`` facade:
+
+* :mod:`repro.stream.state` — the mutable edge-set substrate
+  (:class:`MutableGraph`): stream-ordered ``apply`` with structured
+  per-update statuses (idempotent no-ops, never silent miscounts).
+* :mod:`repro.stream.delta` — the exactly-once batch delta rule: three
+  level-free ``run_plan`` probes per phase and an inclusion–exclusion
+  weighting; no bespoke probe code.
+* :mod:`repro.stream.session` — the session handle
+  (``TriangleEngine.stream()``): live exact totals + per-vertex credit,
+  lazily-refreshed cover-edge state, and the reservoir-backed
+  approximate lane.
+"""
+from repro.stream.delta import DeltaCounts, batch_delta, probe_sum
+from repro.stream.session import StreamSession, StreamStats, StreamUpdate
+from repro.stream.state import (
+    EDGE_STATUSES,
+    MutableGraph,
+    MutationResult,
+    normalize_stream,
+)
+
+__all__ = [
+    "EDGE_STATUSES",
+    "DeltaCounts",
+    "MutableGraph",
+    "MutationResult",
+    "StreamSession",
+    "StreamStats",
+    "StreamUpdate",
+    "batch_delta",
+    "normalize_stream",
+    "probe_sum",
+]

@@ -1,0 +1,261 @@
+"""Exact per-batch triangle deltas via the existing intersection engine.
+
+**The delta rule** (DESIGN.md §13).  For a *net* batch of inserted
+undirected edges ``I`` into graph ``A`` (giving ``B = A ∪ I``), classify
+the new triangles of ``B`` by how many of their three edges are new:
+``T1 + T2 + T3`` with ``Tj`` = triangles containing exactly ``j`` edges
+of ``I``.  Three probes of the **same** delta query block — each one a
+plain ``run_plan`` call in the level-free (N-hat) regime against a
+single adjacency view, no bespoke probe code — measure three independent
+weightings of that split:
+
+  ``S_A = Σ_{(u,w)∈I} |N_A(u) ∩ N_A(w)|  =  T1``
+    (probed against the *pre-batch* adjacency: both other edges must be
+    old, so triangles with ≥ 2 new edges contribute nothing),
+
+  ``S_B = Σ_{(u,w)∈I} |N_B(u) ∩ N_B(w)|  =  T1 + 2·T2 + 3·T3``
+    (probed against the *post-batch* adjacency: every new triangle is
+    counted once per new edge it contains — this is where the
+    insert/insert interactions *within* the batch are over-counted),
+
+  ``S_I = Σ_{(u,w)∈I} |N_I(u) ∩ N_I(w)|  =  3·T3``
+    (probed against the adjacency of the delta edges *alone*: only
+    all-new triangles close).
+
+Inclusion–exclusion then recovers the exactly-once total::
+
+  ΔT = T1 + T2 + T3 = (3·(S_A + S_B) − S_I) / 6     (always divisible)
+
+Deletions are the same identity run backwards: deleting ``D`` from ``A``
+(giving ``B = A ∖ D``) is inserting ``D`` into ``B``, so the lost count
+probes ``D`` against ``B`` (small), ``A`` (big) and ``D`` alone, with
+the same weights, and is subtracted.  A mixed batch applies its net
+deletes first, then its net inserts — two phases, each exact, composing
+to ``count(after) − count(before)`` exactly.
+
+**Per-vertex credit** rides the same probes: in the level-free regime
+``run_plan(per_vertex=True)`` credits all three corners once per hit,
+so the weighted combination ``(3·(P_A + P_B) − P_I) / 6`` pays every
+corner of every delta triangle exactly one credit (each corner's
+numerator is 6 whatever ``j`` is: ``3·(1+1)``, ``3·(0+2)``,
+``3·(0+3) − 3``).  Both divisions are checked, not assumed — a nonzero
+remainder is an internal-invariant failure and raises.
+
+Plans are the *exact* host-side ``plan_buckets`` plans (the per-probe
+degree profile is known on the host — the session maintains live degree
+arrays), so the probes can never overflow: bounded-plan capacity flags
+do not exist on this path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.dtypes import jnp_index_dtype
+from repro.core.intersect import (
+    CsrAdjacency,
+    IntersectPlan,
+    plan_buckets,
+    resolve_backend,
+    run_plan,
+)
+from repro.graph.csr import Graph, from_edges
+
+__all__ = ["DeltaCounts", "batch_delta", "padded_graph", "probe_sum"]
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _next_pow4(x: int) -> int:
+    """Pow4 ceiling — the candidate-width quantizer.  Pow2 already keeps
+    the jit key stable for a *static* graph, but a drifting degree
+    profile flips the block's max min-degree across adjacent pow2 bins
+    batch to batch, and every flip is a fresh compile mid-stream.  The
+    coarser pow4 grid costs at most 2x probe width and pins the key."""
+    p = 1
+    while p < int(x):
+        p <<= 2
+    return p
+
+
+def padded_graph(edges: np.ndarray, n_nodes: int) -> Graph:
+    """``from_edges`` with the slot budget rounded up to a power of two
+    (min 128).  Every CSR snapshot the streaming path probes goes
+    through here: a mutating session drifts its edge count every batch,
+    and un-quantized ``2m`` slot shapes would make every probe a fresh
+    jit compile — the pow2 ceiling keeps the adjacency aval stable
+    until the edge count doubles, so batch 2 onward runs warm."""
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    slots = max(128, _next_pow2(2 * e.shape[0]))
+    return from_edges(e, n_nodes, num_slots=slots)
+
+
+@functools.lru_cache(maxsize=128)
+def _probe_program(plan: IntersectPlan, per_vertex: bool):
+    """One fused jit program per (plan, attribution) pair: the whole
+    level-free ``run_plan`` dispatches as a single compiled call instead
+    of eager op-by-op execution.  The plan is hashable and the probe
+    shapes are pow2-quantized (``probe_sum``), so a mutation stream
+    converges onto a handful of cache entries."""
+
+    def fn(adj, qu, qw):
+        return run_plan(adj, qu, qw, plan, level=None,
+                        per_vertex=per_vertex)
+
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaCounts:
+    """One phase's exactly-once triangle delta.
+
+    ``triangles`` is signed (< 0 for a delete phase); ``per_vertex`` is
+    the matching signed credit array (int64[n]) when attribution was
+    requested, else ``None``.  ``probes`` counts the ``run_plan`` calls
+    the phase issued (0, 2 or 3 — the all-new probe is skipped for
+    single-edge batches, where ``T3`` cannot exist)."""
+
+    triangles: int
+    per_vertex: Optional[np.ndarray]
+    probes: int
+
+
+def probe_sum(
+    g: Graph,
+    delta: np.ndarray,
+    deg: np.ndarray,
+    *,
+    options,
+    per_vertex: bool,
+) -> tuple[int, Optional[np.ndarray]]:
+    """``Σ_{(u,w)∈delta} |N_g(u) ∩ N_g(w)|`` (and, with ``per_vertex``,
+    the level-free credit vector) via ONE exact-planned ``run_plan``.
+
+    ``deg`` is the host degree array of ``g`` — its maximum prices the
+    plan's (single) static width, so the probe can never overflow.
+    """
+    h = int(delta.shape[0])
+    if h == 0 or g.n_nodes == 0 or g.num_slots == 0:
+        # nothing to probe, or an edgeless adjacency (every
+        # intersection empty; run_plan's candidate gather has no slots)
+        return 0, (np.zeros(g.n_nodes, dtype=np.int64) if per_vertex
+                   else None)
+    qu = delta[:, 0]
+    qw = delta[:, 1]
+    # CANONICAL probe layout — built for jit-cache residency, not for
+    # per-query width savings (a delta block is at most
+    # ``stream_buffer`` queries; fine-grained widths are noise at that
+    # size, compiles are not).  The block is pow2-padded with (n, n)
+    # sentinels (degree 0, zero hits, credit lands in the sentinel
+    # slot) and the plan is ONE bucket: candidate width = pow2 ceiling
+    # of the block's max MIN-endpoint degree (the probe engine walks
+    # the smaller list), target depth = pow2 ceiling of the graph's
+    # max degree (log-cost only).  The jit key then depends on (block
+    # size, two pow2 widths, slot budget) — so a long mutation stream
+    # settles onto a handful of warm fused programs instead of
+    # compiling every batch, and no candidate or target list can ever
+    # exceed its width (overflow is impossible).
+    ds_max = int(np.minimum(deg[qu], deg[qw]).max())
+    pad = max(64, _next_pow2(h)) - h
+    if pad:
+        sent = np.full(pad, g.n_nodes, dtype=np.int64)
+        qu = np.concatenate([qu, sent])
+        qw = np.concatenate([qw, sent])
+    w_cand = _next_pow4(max(16, ds_max))
+    w_targ = _next_pow2(max(1, int(deg.max()) if deg.size else 1))
+    backend, interpret = resolve_backend(options.backend, options.interpret)
+    chunk = int(options.query_chunk) if options.query_chunk else None
+    plan = plan_buckets(
+        np.full(qu.shape[0], w_cand, dtype=np.int64),
+        np.full(qu.shape[0], max(w_cand, w_targ), dtype=np.int64),
+        bucket_widths=(),
+        # chunked runs need chunk-multiple bucket rows (plan_view's rule)
+        row_mult=(chunk if chunk else 64),
+        backend=backend,
+        interpret=interpret,
+        query_chunk=chunk,
+    )
+    vid = jnp_index_dtype(g.n_nodes, site="stream.delta query block")
+    res = _probe_program(plan, per_vertex)(
+        CsrAdjacency.from_graph(g),
+        np.asarray(qu, dtype=vid),
+        np.asarray(qw, dtype=vid),
+    )
+    total = int(res.c1)  # level-free: c1 is the raw hit total, c2 == 0
+    pv = None
+    if per_vertex:
+        # slot n is the sentinel bucket (padding rows); real credit only
+        pv = np.asarray(res.per_vertex)[: g.n_nodes].astype(np.int64)
+    return total, pv
+
+
+def batch_delta(
+    delta: np.ndarray,
+    *,
+    g_small: Graph,
+    g_big: Graph,
+    deg_small: np.ndarray,
+    deg_big: np.ndarray,
+    n_nodes: int,
+    options,
+    per_vertex: bool,
+    sign: int,
+) -> DeltaCounts:
+    """Exactly-once triangle delta of one phase.
+
+    ``delta`` (int64[b, 2], unique undirected rows) is the phase's net
+    edge set; ``g_small``/``g_big`` are CSR snapshots **without** and
+    **with** those edges (insert phase: before/after; delete phase:
+    after/before), with their host degree arrays.  ``sign`` is ``+1``
+    for inserts, ``-1`` for deletes.
+    """
+    b = int(delta.shape[0])
+    if b == 0:
+        return DeltaCounts(
+            0, np.zeros(n_nodes, dtype=np.int64) if per_vertex else None, 0
+        )
+    s_small, p_small = probe_sum(
+        g_small, delta, deg_small, options=options, per_vertex=per_vertex
+    )
+    s_big, p_big = probe_sum(
+        g_big, delta, deg_big, options=options, per_vertex=per_vertex
+    )
+    probes = 2
+    if b >= 3:
+        # the all-new term needs >= 3 delta edges to close a triangle
+        g_delta = padded_graph(delta, n_nodes)
+        deg_delta = np.zeros(n_nodes, dtype=np.int64)
+        np.add.at(deg_delta, delta[:, 0], 1)
+        np.add.at(deg_delta, delta[:, 1], 1)
+        s_delta, p_delta = probe_sum(
+            g_delta, delta, deg_delta, options=options,
+            per_vertex=per_vertex,
+        )
+        probes = 3
+    else:
+        s_delta = 0
+        p_delta = (np.zeros(n_nodes, dtype=np.int64) if per_vertex
+                   else None)
+    num = 3 * (s_small + s_big) - s_delta
+    if num % 6:
+        raise AssertionError(
+            f"delta identity violated: 3*({s_small}+{s_big})-{s_delta} "
+            f"not divisible by 6 — the probes disagree on the batch split"
+        )
+    pv = None
+    if per_vertex:
+        pv_num = 3 * (p_small + p_big) - p_delta
+        bad = pv_num % 6
+        if bad.any():
+            raise AssertionError(
+                "per-vertex delta identity violated at vertices "
+                f"{np.nonzero(bad)[0][:8].tolist()}"
+            )
+        pv = sign * (pv_num // 6)
+    return DeltaCounts(sign * (num // 6), pv, probes)

@@ -1,0 +1,264 @@
+"""Mutable-graph state for the streaming route (DESIGN.md §13).
+
+A :class:`MutableGraph` is the host-side source of truth of a stream
+session: the *simple undirected graph* as a set of packed edge keys
+(``lo * n + hi`` — exactly the key space ``graph.csr._normalize_edges``
+dedups on, so a CSR snapshot of this set and ``from_edges`` of the same
+edge list are the same graph by construction), plus the live degree
+array.  Mutations are applied **in stream order** with a structured
+per-update status — inserting an edge that is already present and
+deleting one that is absent are *idempotent no-ops*, reported as such,
+never silent miscounts (the duplicate-collapse contract ``from_edges``
+documents is what makes the CSR rebuild agree with this set).
+
+Everything here is NumPy + a Python set: mutation batches are
+capacity-budgeted by the session (``TCOptions.stream_buffer``), so the
+per-batch host work is small and bounded; only the *probes* of the
+delta engine (``stream.delta``) touch the device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence, Union
+
+import numpy as np
+
+__all__ = [
+    "EDGE_STATUSES",
+    "MutableGraph",
+    "MutationResult",
+    "normalize_stream",
+]
+
+#: Every structured per-update status ``MutableGraph.apply`` can report:
+#:
+#:   ``inserted`` / ``deleted``   — the update changed the edge set;
+#:   ``noop-present``             — insert of an edge already present
+#:                                  (idempotent, nothing changed);
+#:   ``noop-absent``              — delete of an edge not present
+#:                                  (idempotent, nothing changed);
+#:   ``noop-self-loop``           — a ``(v, v)`` update (simple graphs
+#:                                  carry no self loops on any path);
+#:   ``rejected``                 — an endpoint outside ``[0, n)`` (the
+#:                                  packed-key arithmetic would alias it
+#:                                  onto a fabricated edge — refused,
+#:                                  like ``TriangleServer.submit``).
+EDGE_STATUSES = (
+    "inserted",
+    "deleted",
+    "noop-present",
+    "noop-absent",
+    "noop-self-loop",
+    "rejected",
+)
+
+#: ops accepted by ``normalize_stream`` for one update
+_INSERT_OPS = frozenset({1, +1, "+", "insert", "ins", "add"})
+_DELETE_OPS = frozenset({-1, "-", "delete", "del", "remove"})
+
+
+def normalize_stream(
+    updates: Union[Sequence, tuple],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Normalize an edge-mutation stream to ``(ops int8[k], edges
+    int64[k, 2])`` with ``ops`` in {+1, -1}.
+
+    Accepts either an iterable of ``(op, u, v)`` triples (``op`` any of
+    ``+1/-1``, ``"+"/"-"``, ``"insert"/"delete"``) or a pre-split
+    ``(ops, edges)`` array pair.  Order is preserved — the stream is
+    applied sequentially, so ``[(+1, u, v), (-1, u, v)]`` really does
+    insert then delete.
+    """
+    if (isinstance(updates, tuple) and len(updates) == 2
+            and not np.isscalar(updates[0])
+            and np.asarray(updates[0]).ndim == 1
+            and np.asarray(updates[1]).ndim == 2):
+        ops = np.asarray(updates[0])
+        edges = np.asarray(updates[1], dtype=np.int64).reshape(-1, 2)
+        if ops.shape[0] != edges.shape[0]:
+            raise ValueError(
+                f"ops/edges length mismatch: {ops.shape[0]} vs "
+                f"{edges.shape[0]}"
+            )
+        out_ops = np.where(ops.astype(np.int64) >= 0, 1, -1)
+        return out_ops.astype(np.int8), edges
+    ops_l, edges_l = [], []
+    for item in updates:
+        op, u, v = item
+        if op in _INSERT_OPS:
+            ops_l.append(1)
+        elif op in _DELETE_OPS:
+            ops_l.append(-1)
+        else:
+            raise ValueError(
+                f"unknown stream op {op!r}; use +1/'insert' or "
+                f"-1/'delete'"
+            )
+        edges_l.append((int(u), int(v)))
+    ops = np.asarray(ops_l, dtype=np.int8)
+    edges = (np.asarray(edges_l, dtype=np.int64).reshape(-1, 2)
+             if edges_l else np.zeros((0, 2), dtype=np.int64))
+    return ops, edges
+
+
+@dataclasses.dataclass(frozen=True)
+class MutationResult:
+    """One applied mutation batch, fully accounted for.
+
+    ``statuses`` is aligned with the input stream (one entry per update,
+    in order — see :data:`EDGE_STATUSES`).  ``net_inserted`` /
+    ``net_deleted`` are the *net* set changes as ``int64[·, 2]``
+    ``(lo, hi)`` arrays: an edge inserted then deleted inside the same
+    batch appears in neither (the delta engine probes net changes only —
+    the count depends on the final state, and intra-batch flip-flops
+    cancel exactly)."""
+
+    statuses: tuple[str, ...]
+    net_inserted: np.ndarray
+    net_deleted: np.ndarray
+
+    @property
+    def counts(self) -> dict:
+        c: dict = {}
+        for s in self.statuses:
+            c[s] = c.get(s, 0) + 1
+        return c
+
+    @property
+    def changed(self) -> int:
+        return int(self.net_inserted.shape[0] + self.net_deleted.shape[0])
+
+
+class MutableGraph:
+    """The CSR substrate's mutable twin: a simple undirected graph as a
+    set of packed edge keys plus live degrees, with stream-ordered
+    ``apply`` and O(m) snapshots back into the static-shape world."""
+
+    def __init__(self, edges, n_nodes: int):
+        n = int(n_nodes)
+        if n < 0:
+            raise ValueError(f"n_nodes must be >= 0; got {n}")
+        self.n_nodes = n
+        self.deg = np.zeros(n, dtype=np.int64)
+        self._keys: set[int] = set()
+        self._sorted_keys: Optional[np.ndarray] = None
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if e.size:
+            if e.min() < 0 or e.max() >= n:
+                raise ValueError(
+                    f"edge endpoints must lie in [0, {n}); "
+                    f"got [{e.min()}, {e.max()}]"
+                )
+            e = e[e[:, 0] != e[:, 1]]
+            lo = np.minimum(e[:, 0], e[:, 1])
+            hi = np.maximum(e[:, 0], e[:, 1])
+            keys = np.unique(lo * np.int64(n) + hi)
+            self._keys = set(int(k) for k in keys)
+            np.add.at(self.deg, keys // n, 1)
+            np.add.at(self.deg, keys % n, 1)
+
+    # ------------------------------------------------------------ views
+    @property
+    def num_edges(self) -> int:
+        return len(self._keys)
+
+    def sorted_keys(self) -> np.ndarray:
+        """Sorted int64 packed keys of the current edge set (cached;
+        invalidated by any applied change) — the closure oracle the
+        approximate lane's estimator binary-searches."""
+        if self._sorted_keys is None:
+            self._sorted_keys = np.fromiter(
+                self._keys, dtype=np.int64, count=len(self._keys)
+            )
+            self._sorted_keys.sort()
+        return self._sorted_keys
+
+    def edges(self) -> np.ndarray:
+        """Current undirected edges as ``int64[m, 2]`` ``(lo, hi)`` rows
+        in key order — ``from_edges(self.edges(), self.n_nodes)`` is the
+        graph's CSR snapshot."""
+        k = self.sorted_keys()
+        if not k.size:
+            return np.zeros((0, 2), dtype=np.int64)
+        n = np.int64(self.n_nodes)
+        return np.stack([k // n, k % n], axis=1)
+
+    def has_edges(self, edges: np.ndarray) -> np.ndarray:
+        """bool[k]: membership of each (either-direction) pair."""
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        out = np.zeros(e.shape[0], dtype=bool)
+        n = self.n_nodes
+        for i, (u, v) in enumerate(e):
+            if 0 <= u < n and 0 <= v < n and u != v:
+                lo, hi = (u, v) if u < v else (v, u)
+                out[i] = int(lo) * n + int(hi) in self._keys
+        return out
+
+    # ------------------------------------------------------------ apply
+    def apply(self, ops: np.ndarray, edges: np.ndarray) -> MutationResult:
+        """Apply one mutation batch in stream order.
+
+        Every update gets a structured status (:data:`EDGE_STATUSES`) —
+        re-inserting a present edge and deleting an absent one are
+        reported idempotent no-ops, out-of-range endpoints are
+        ``rejected`` — and the result carries the batch's *net* set
+        changes for the delta engine.  Degrees are updated live.
+        """
+        ops = np.asarray(ops)
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if ops.shape[0] != e.shape[0]:
+            raise ValueError(
+                f"ops/edges length mismatch: {ops.shape[0]} vs {e.shape[0]}"
+            )
+        n = self.n_nodes
+        before = self._keys
+        inserted: set[int] = set()   # net-new keys this batch
+        deleted: set[int] = set()    # net-removed keys this batch
+        statuses: list[str] = []
+        for op, (u, v) in zip(ops, e):
+            u, v = int(u), int(v)
+            if not (0 <= u < n and 0 <= v < n):
+                statuses.append("rejected")
+                continue
+            if u == v:
+                statuses.append("noop-self-loop")
+                continue
+            lo, hi = (u, v) if u < v else (v, u)
+            key = lo * n + hi
+            present = (key in before or key in inserted) and key not in deleted
+            if op >= 0:
+                if present:
+                    statuses.append("noop-present")
+                else:
+                    statuses.append("inserted")
+                    deleted.discard(key)
+                    if key not in before:
+                        inserted.add(key)
+                    self.deg[lo] += 1
+                    self.deg[hi] += 1
+            else:
+                if not present:
+                    statuses.append("noop-absent")
+                else:
+                    statuses.append("deleted")
+                    if key in inserted:
+                        inserted.discard(key)
+                    else:
+                        deleted.add(key)
+                    self.deg[lo] -= 1
+                    self.deg[hi] -= 1
+        if inserted or deleted:
+            self._keys = (before - deleted) | inserted
+            self._sorted_keys = None
+        return MutationResult(
+            statuses=tuple(statuses),
+            net_inserted=self._decode(inserted),
+            net_deleted=self._decode(deleted),
+        )
+
+    def _decode(self, keys: Iterable[int]) -> np.ndarray:
+        arr = np.sort(np.fromiter(keys, dtype=np.int64))
+        if not arr.size:
+            return np.zeros((0, 2), dtype=np.int64)
+        n = np.int64(self.n_nodes)
+        return np.stack([arr // n, arr % n], axis=1)

@@ -356,7 +356,8 @@ class TestHostsyncPass:
     def test_route_programs_are_callback_free(self):
         specs = enumerate_route_specs(p_values=(1,))
         programs = [p for s in specs for p in s.programs()]
-        assert len(programs) == 22  # 4 batch + 2x4 local + 2 find + 8 dist
+        # 4 batch + 2x4 local + 2 find + 8 dist + 4 stream
+        assert len(programs) == 26
         assert audit_program_callbacks(programs) == []
 
 

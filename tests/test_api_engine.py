@@ -270,7 +270,8 @@ def test_tcoptions_validates_in_one_place():
     o = TCOptions(bucket_widths=[np.int64(32), 256])
     assert o.bucket_widths == (32, 256)
     assert hash(o) == hash(TCOptions(bucket_widths=(32, 256)))
-    assert "auto" in ROUTES and "approx" in ROUTES and len(ROUTES) == 5
+    assert "auto" in ROUTES and "approx" in ROUTES
+    assert "stream" in ROUTES and len(ROUTES) == 6
 
 
 def test_plan_view_is_the_plan_cache_key():

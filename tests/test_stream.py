@@ -1,0 +1,404 @@
+"""Streaming subsystem (repro.stream, DESIGN.md §13) — engine vs the
+independent brute force.
+
+The standing invariant: after EVERY applied mutation batch, the
+session's maintained ``triangles`` (and, with attribution on, its
+``per_vertex`` array) must be **bit-identical** to ``tests/oracle.py``
+recounting the session's current edge set from scratch.  The delta
+engine gets no epsilon and no amortization excuse — one wrong
+insert/insert interaction on one batch is a failure.
+
+Also covered here: the duplicate-edge idempotency contract
+(``MutableGraph.apply`` statuses vs ``from_edges`` collapse), the
+stale-then-refreshed cover-set lifecycle, the over-budget approximate
+lane, and exactly-once serving invariants when mutations interleave
+with a chaos-harness request replay.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import FIXTURES, optional_hypothesis
+from tests import oracle
+
+from repro.api import TCOptions, TriangleEngine
+from repro.graph import generators as gen
+from repro.graph.csr import from_edges
+from repro.launch.robust import TimedRequest, run_chaos
+from repro.stream import MutableGraph, normalize_stream
+
+given, settings, st = optional_hypothesis()
+
+#: refresh disabled — these tests must prove the DELTA path, not let a
+#: lazy recount silently repair a wrong incremental total
+NO_REFRESH = TCOptions(per_vertex=True, stream_staleness=1e9)
+
+
+def _random_stream(state: MutableGraph, rng, *, n_ins: int, n_del: int):
+    """A shuffled mixed insert/delete stream valid for ``state``:
+    inserts drawn from absent pairs, deletes from present edges."""
+    n = state.n_nodes
+    present = state.edges()
+    updates = []
+    if n_del and present.shape[0]:
+        take = rng.choice(present.shape[0],
+                          min(n_del, present.shape[0]), replace=False)
+        updates += [(-1, int(u), int(v)) for u, v in present[take]]
+    tries = 0
+    while n_ins > 0 and tries < 50 * n_ins:
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        tries += 1
+        if u == v or state.has_edges([(u, v)])[0]:
+            continue
+        updates.append((+1, u, v))
+        n_ins -= 1
+    rng.shuffle(updates)
+    return updates
+
+
+def _assert_oracle_identical(sess):
+    """The streaming invariant: session totals == brute force recount
+    of the session's own edge set, bit for bit."""
+    edges, n = sess.state.edges(), sess.n_nodes
+    assert sess.triangles == oracle.total_triangles(edges, n)
+    if sess.per_vertex is not None:
+        np.testing.assert_array_equal(
+            sess.per_vertex, oracle.triangle_counts(edges, n)
+        )
+        assert int(sess.per_vertex.sum()) == 3 * sess.triangles
+
+
+# ------------------------------------------------------------ delta rule
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_stream_matches_oracle_after_every_batch(name):
+    edges, n = FIXTURES[name]
+    eng = TriangleEngine(options=NO_REFRESH)
+    sess = eng.stream((edges, n))
+    _assert_oracle_identical(sess)  # opening refresh seeds exact totals
+    rng = np.random.default_rng(hash(name) % (1 << 31))
+    for _ in range(4):
+        up = sess.apply(_random_stream(sess.state, rng, n_ins=7, n_del=5))
+        assert not up.refreshed
+        assert up.exact and up.delta_triangles is not None
+        _assert_oracle_identical(sess)
+
+
+def test_triangle_destroying_deletes():
+    # complete9: every edge sits on 7 triangles; deleting edges must
+    # subtract exactly the brute-force difference, batch by batch
+    edges, n = gen.complete(9)
+    eng = TriangleEngine(options=NO_REFRESH)
+    sess = eng.stream((edges, n))
+    assert sess.triangles == 84  # C(9,3)
+    rng = np.random.default_rng(0)
+    while sess.num_edges:
+        present = sess.state.edges()
+        take = rng.choice(present.shape[0],
+                          min(6, present.shape[0]), replace=False)
+        before = sess.triangles
+        up = sess.delete(present[take])
+        assert up.delta_triangles == sess.triangles - before <= 0
+        _assert_oracle_identical(sess)
+    assert sess.triangles == 0
+    assert not sess.per_vertex.any()
+
+
+def test_intra_batch_interactions_exactly_once():
+    # a batch whose inserts close triangles with EACH OTHER (T2/T3
+    # terms) — the inclusion-exclusion weighting, not probe luck
+    edges = np.array([[0, 1]])
+    eng = TriangleEngine(options=NO_REFRESH)
+    sess = eng.stream((edges, 6))
+    # one batch adds a complete K5 worth of edges over {0..4}
+    new = [(+1, u, v) for u in range(5) for v in range(u + 1, 5)
+           if (u, v) != (0, 1)]
+    up = sess.apply(new)
+    assert up.delta_triangles == 10  # C(5,3), all from one batch
+    _assert_oracle_identical(sess)
+    # and the reverse batch destroys them exactly once each
+    up = sess.apply([(-1, u, v) for _, u, v in new])
+    assert up.delta_triangles == -10
+    assert sess.triangles == 0
+    _assert_oracle_identical(sess)
+
+
+def test_flip_flops_cancel_to_net_change():
+    edges, n = FIXTURES["karate"]
+    eng = TriangleEngine(options=NO_REFRESH)
+    sess = eng.stream((edges, n))
+    t0 = sess.triangles
+    absent = (0, 9) if not sess.state.has_edges([(0, 9)])[0] else (0, 16)
+    present = tuple(int(x) for x in sess.state.edges()[0])
+    up = sess.apply([
+        (+1, *absent), (-1, *absent),            # net nothing
+        (-1, *present), (+1, *present),          # net nothing
+        (+1, *absent),                           # net ONE insert
+    ])
+    assert up.statuses == ("inserted", "deleted", "deleted", "inserted",
+                           "inserted")
+    assert up.applied == 5
+    assert sess.state.has_edges([absent])[0]
+    _assert_oracle_identical(sess)
+    up = sess.apply([(-1, *absent)])
+    assert sess.triangles == t0
+    _assert_oracle_identical(sess)
+
+
+def test_buffer_chunking_preserves_exactness():
+    # a stream far longer than the buffer: chunked into many batches,
+    # each probed independently, the composition still oracle-exact
+    edges, n = FIXTURES["er200"]
+    eng = TriangleEngine(options=TCOptions(
+        per_vertex=True, stream_staleness=1e9, stream_buffer=8,
+    ))
+    sess = eng.stream((edges, n))
+    rng = np.random.default_rng(7)
+    batches_before = sess.batches
+    up = sess.apply(_random_stream(sess.state, rng, n_ins=30, n_del=30))
+    assert sess.batches - batches_before >= 6  # really chunked
+    assert up.delta_triangles is not None
+    _assert_oracle_identical(sess)
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_random_streams_property(data):
+    name = data.draw(st.sampled_from(sorted(FIXTURES)), label="fixture")
+    seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+    edges, n = FIXTURES[name]
+    eng = TriangleEngine(options=NO_REFRESH)
+    sess = eng.stream((edges, n))
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        n_ins = int(rng.integers(0, 12))
+        n_del = int(rng.integers(0, 12))
+        sess.apply(_random_stream(sess.state, rng,
+                                  n_ins=n_ins, n_del=n_del))
+        _assert_oracle_identical(sess)
+
+
+# ------------------------------------- idempotency / duplicate contract
+
+
+def test_idempotent_statuses_and_net_sets():
+    g = MutableGraph(np.array([[0, 1], [1, 2]]), 5)
+    ops, edges = normalize_stream([
+        ("+", 0, 1),   # already present
+        ("-", 3, 4),   # absent
+        ("+", 2, 2),   # self loop
+        ("+", 0, 9),   # out of range
+        ("+", 1, 0),   # reversed orientation of a present edge
+        ("+", 3, 4),   # a real insert
+        ("-", 2, 1),   # a real delete (reversed orientation)
+    ])
+    res = g.apply(ops, edges)
+    assert res.statuses == (
+        "noop-present", "noop-absent", "noop-self-loop", "rejected",
+        "noop-present", "inserted", "deleted",
+    )
+    np.testing.assert_array_equal(res.net_inserted, [[3, 4]])
+    np.testing.assert_array_equal(res.net_deleted, [[1, 2]])
+    # replaying the same stream nets NOTHING: the state's 3-4/1-2 flips
+    # from round one invert the statuses, and the intra-batch flip-flop
+    # (delete 3-4 then re-insert it) cancels out of the net sets
+    res2 = g.apply(ops, edges)
+    assert res2.changed == 0
+    assert res2.statuses == (
+        "noop-present", "deleted", "noop-self-loop", "rejected",
+        "noop-present", "inserted", "noop-absent",
+    )
+
+
+def test_mutable_graph_agrees_with_from_edges_collapse():
+    # the CSR packer's duplicate-collapse contract and the mutable
+    # set's idempotency are the SAME rule: dup rows + orientation
+    # flips + self loops in, one simple graph out
+    rng = np.random.default_rng(3)
+    raw = rng.integers(0, 12, size=(60, 2))
+    g_set = MutableGraph(raw, 12)
+    g_csr = from_edges(raw, 12)
+    g_roundtrip = from_edges(g_set.edges(), 12)
+    np.testing.assert_array_equal(np.asarray(g_csr.deg), g_set.deg)
+    np.testing.assert_array_equal(np.asarray(g_csr.dst),
+                                  np.asarray(g_roundtrip.dst))
+    # duplicating the input changes nothing on either side
+    g_dup = from_edges(np.concatenate([raw, raw[::-1, ::-1]]), 12)
+    np.testing.assert_array_equal(np.asarray(g_csr.dst),
+                                  np.asarray(g_dup.dst))
+
+
+def test_session_rejects_lossy_options():
+    eng = TriangleEngine()
+    with pytest.raises(ValueError, match="d_max"):
+        eng.stream(FIXTURES["karate"], options=TCOptions(d_max=4))
+
+
+# --------------------------------------------- staleness / lazy refresh
+
+
+def test_stale_then_refreshed_cover_set():
+    edges, n = FIXTURES["dolphins_like"]
+    eng = TriangleEngine(options=TCOptions(
+        per_vertex=True, stream_staleness=0.3,
+    ))
+    sess = eng.stream((edges, n))
+    base = eng.count((edges, n), route="local",
+                     options=TCOptions(per_vertex=True))
+    rep = sess.count()  # freshly opened == refreshed
+    assert sess.refreshes == 1
+    assert (rep.c1, rep.c2) == (base.c1, base.c2)
+    assert rep.k == base.k and rep.levels is not None
+    assert rep.stream.staleness == 0.0
+
+    # a small mutation: cover set stales IMMEDIATELY, count stays exact,
+    # refresh does NOT fire below the threshold
+    up = sess.apply([(+1, 0, n - 1)] if not sess.state.has_edges(
+        [(0, n - 1)])[0] else [(-1, 0, n - 1)])
+    assert not up.refreshed and sess.refreshes == 1
+    rep = sess.count()
+    assert rep.c1 is None and rep.c2 is None and np.isnan(rep.k)
+    assert rep.levels is None
+    assert 0 < rep.stream.staleness <= 0.3
+    _assert_oracle_identical(sess)  # N-hat regime: still exact
+
+    # push the touched fraction past the threshold: refresh fires once,
+    # restoring the full cover-edge payload
+    rng = np.random.default_rng(5)
+    while True:
+        up = sess.apply(_random_stream(sess.state, rng, n_ins=9, n_del=9))
+        if up.refreshed:
+            break
+    assert sess.refreshes == 2
+    rep = sess.count()
+    assert rep.c1 is not None and rep.c2 is not None
+    assert not np.isnan(rep.k) and rep.levels is not None
+    assert rep.stream.refreshes == 2 and rep.stream.staleness == 0.0
+    _assert_oracle_identical(sess)
+
+
+def test_forced_and_pinned_refresh():
+    edges, n = FIXTURES["karate"]
+    eng = TriangleEngine(options=TCOptions(stream_staleness=1e-9))
+    sess = eng.stream((edges, n))
+    # threshold microscopically low: any change refreshes by default...
+    up = sess.apply([(+1, 0, n - 1)])
+    assert up.refreshed
+    # ...unless the call pins the policy off
+    up = sess.apply([(-1, 0, n - 1)], refresh=False)
+    assert not up.refreshed
+    # and refresh=True forces one even with nothing applied
+    up = sess.apply([], refresh=True)
+    assert up.refreshed and up.applied == 0
+
+
+# ------------------------------------------------------ approximate lane
+
+
+def test_over_budget_batch_takes_approx_lane():
+    edges, n = FIXTURES["er200"]
+    eng = TriangleEngine(options=TCOptions(
+        stream_staleness=1e9, stream_exact_edges=10,
+        stream_approx_rate=0.5,
+    ))
+    sess = eng.stream((edges, n), seed=11)
+    rng = np.random.default_rng(1)
+    up = sess.apply(_random_stream(sess.state, rng, n_ins=60, n_del=0))
+    assert not up.exact and up.delta_triangles is None
+    rep = sess.count()
+    assert rep.approx is not None and rep.stream.approx_batches == 1
+    assert not rep.stream.exact and rep.per_vertex is None
+    assert rep.approx.stderr >= 0.0
+    truth = oracle.total_triangles(sess.state.edges(), n)
+    # an estimate with error bars, not garbage: within 6 sigma + slack
+    assert abs(rep.triangles - truth) <= 6 * max(rep.approx.stderr, 1.0)
+    # a small follow-up batch STAYS approximate (the maintained exact
+    # total is gone until a refresh resyncs it)
+    up = sess.apply(_random_stream(sess.state, rng, n_ins=2, n_del=0))
+    assert not up.exact
+    sess.refresh()
+    rep = sess.count()
+    assert rep.stream.exact and rep.approx is None
+    assert rep.triangles == oracle.total_triangles(sess.state.edges(), n)
+
+
+# ------------------------------------------------- engine/server surface
+
+
+def test_one_shot_stream_route_matches_local():
+    edges, n = FIXTURES["ring_of_cliques"]
+    o = TCOptions(per_vertex=True)
+    eng = TriangleEngine(options=o)
+    local = eng.count((edges, n), route="local")
+    rep = eng.count((edges, n), route="stream")
+    assert rep.route == "stream"
+    assert rep.triangles == local.triangles
+    assert (rep.c1, rep.c2, rep.k) == (local.c1, local.c2, local.k)
+    np.testing.assert_array_equal(rep.per_vertex, local.per_vertex)
+    assert rep.stream is not None and rep.stream.exact
+
+
+def test_empty_graph_session():
+    eng = TriangleEngine(options=TCOptions(per_vertex=True))
+    sess = eng.stream((np.zeros((0, 2), np.int64), 0))
+    assert sess.triangles == 0 and sess.num_edges == 0
+    rep = sess.count()
+    assert rep.triangles == 0 and rep.route == "stream"
+    up = sess.apply([(+1, 0, 1)])
+    assert up.statuses == ("rejected",)
+
+
+def test_server_named_sessions():
+    eng = TriangleEngine(options=TCOptions(per_vertex=True))
+    srv = eng.serve()
+    edges, n = FIXTURES["karate"]
+    srv.stream_session("karate", (edges, n))
+    with pytest.raises(ValueError, match="already open"):
+        srv.stream_session("karate", (edges, n))
+    up = srv.mutate("karate", [(+1, 0, n - 1), (+1, 0, n - 1)])
+    assert up.statuses[1] == "noop-present"
+    rep = srv.stream_count("karate")
+    assert rep.route == "stream"
+    assert rep.triangles == oracle.total_triangles(
+        srv.stream_session("karate").state.edges(), n
+    )
+    s = srv.summary()
+    assert s["stream_sessions"] == 1 and s["stream_mutations"] == 2
+    stats = srv.close_session("karate")
+    assert stats.inserted == 1 and stats.noops == 1
+    assert srv.summary()["stream_sessions"] == 0
+    with pytest.raises(KeyError, match="no open stream session"):
+        srv.mutate("karate", [(+1, 0, 1)])
+
+
+def test_chaos_replay_with_interleaved_mutations():
+    # the exactly-once serving invariant must hold while a live stream
+    # session mutates between pump ticks of a chaos replay — streaming
+    # is synchronous host work, invisible to the batched queues
+    eng = TriangleEngine(options=TCOptions(per_vertex=True))
+    srv = eng.serve(batch_size=4)
+    edges, n = FIXTURES["geometric"]
+    sess = srv.stream_session("live", (edges, n))
+    rng = np.random.default_rng(2)
+    real_pump = srv.pump
+    ticks = {"n": 0}
+
+    def chaotic_pump():
+        ticks["n"] += 1
+        if ticks["n"] % 3 == 0:  # mutate mid-replay, between arrivals
+            srv.mutate("live",
+                       _random_stream(sess.state, rng, n_ins=2, n_del=1))
+        real_pump()
+
+    srv.pump = chaotic_pump
+    trace = [TimedRequest(0.002 * i, *FIXTURES[k]) for i, k in
+             enumerate(("karate", "complete9", "dolphins_like",
+                        "ring_of_cliques", "er200"))]
+    audit = run_chaos(srv, trace, speed=4.0)
+    srv.pump = real_pump
+    assert audit["ok"], audit
+    assert audit["answered"] == len(trace)
+    assert srv.stream_mutations > 0  # the interleaving really happened
+    _assert_oracle_identical(sess)  # and the session stayed exact
